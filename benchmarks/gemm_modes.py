@@ -1,0 +1,77 @@
+"""Approximate-GEMM execution modes: wall time (CPU, indicative) and
+accuracy vs. the exact GEMM — the framework-level counterpart of the
+paper's accuracy-configurability table.
+
+Modes (core.approx_matmul / kernels.ops):
+  exact     plain f32 matmul (baseline the paper compares against)
+  bitexact  faithful paper semantics via the product LUT
+  kernel    the Pallas LUT kernel (interpret mode on CPU)
+  lowrank   exact GEMM + rank-r SVD error correction (MXU-friendly)
+  inject    moment-matched stochastic error injection (O(1) at scale)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.approx_matmul import approx_matmul
+from repro.kernels.ops import approx_matmul_kernel
+
+M, K, N = 128, 256, 128
+N_BITS, T_SPLIT = 8, 4
+REPEAT = 5
+
+
+def _timed(fn, *args, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(REPEAT):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return np.asarray(out), (time.perf_counter() - t0) / REPEAT * 1e6
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    exact = np.asarray(x @ w)
+    bitexact = None
+    out = []
+
+    runs = [
+        ("exact", jax.jit(lambda: approx_matmul(x, w, mode="exact"))),
+        ("bitexact", jax.jit(lambda: approx_matmul(x, w, n=N_BITS, t=T_SPLIT, mode="bitexact"))),
+        ("kernel_lut", lambda: approx_matmul_kernel(x, w, n=N_BITS, t=T_SPLIT, mode="bitexact")),
+        ("lowrank_r8", jax.jit(lambda: approx_matmul(x, w, n=N_BITS, t=T_SPLIT, mode="lowrank", rank=8))),
+        ("inject", jax.jit(lambda: approx_matmul(x, w, n=N_BITS, t=T_SPLIT, mode="inject",
+                                                 key=jax.random.PRNGKey(0)))),
+    ]
+    for name, fn in runs:
+        got, us = _timed(fn)
+        if name == "bitexact":
+            bitexact = got
+        rel = float(np.abs(got - exact).mean() / np.abs(exact).mean())
+        row = {"mode": name, "us_per_call_cpu": round(us, 1),
+               "rel_err_vs_exact": rel,
+               "shape": f"{M}x{K}x{N}", "n": N_BITS, "t": T_SPLIT}
+        if bitexact is not None:
+            row["rel_err_vs_bitexact"] = float(
+                np.abs(got - bitexact).mean() / np.abs(exact).mean())
+        out.append(row)
+    return out
+
+
+def main(emit) -> None:
+    for r in rows():
+        emit("gemm_modes", r)
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r)

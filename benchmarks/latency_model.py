@@ -1,0 +1,94 @@
+"""Paper Figure 3: latency / area / power trade-offs of the accurate vs.
+approximate (segmented) sequential multiplier.
+
+We cannot tape out from this container, so the trade-off is reproduced
+with standard gate-delay models over the same design space the paper
+sweeps (n in {4..256}, t = n/2):
+
+  ripple-carry:     delay(n) = n * t_fa                (the paper's LUT
+                    carry chains on the Zynq fabric behave linearly)
+  segmented:        delay(n, t) = max(t, n - t) * t_fa + t_mux
+  carry-lookahead:  delay(n) = (4 + 2*ceil(log4 n)) * t_g  (ASIC flavour)
+
+Reported: latency reduction % (paper: FPGA avg 19.15%, up to 29%;
+ASIC avg 16.1%, up to 34.14%), area proxy (adder full-adder cells +
+fix-to-1 mux cells, paper: <3% overhead), and the sequential-vs-
+combinatorial area ratio (paper: up to 99% savings at n=256).
+"""
+
+from __future__ import annotations
+
+import math
+
+NS = (4, 8, 16, 32, 64, 128, 256)
+T_FA = 1.0  # normalized full-adder delay
+T_MUX = 0.4  # fix-to-1 mux + D-FF setup margin
+
+
+def ripple_delay(n: int) -> float:
+    return n * T_FA
+
+
+def segmented_delay(n: int, t: int) -> float:
+    return max(t, n - t) * T_FA + T_MUX
+
+
+def cla_delay(n: int) -> float:
+    return (4 + 2 * math.ceil(math.log(max(n, 4), 4))) * 1.0
+
+
+def area_cells(n: int, segmented: bool) -> float:
+    # n FA cells + registers; segmented adds the n+t fix-to-1 muxes + D-FF
+    base = n * 8 + 2 * n * 4  # FA + two shift registers (paper Fig. 1)
+    if segmented:
+        base += (n + n // 2) * 1 + 2  # mux cells + carry D-FF
+    return base
+
+
+def combinatorial_area(n: int) -> float:
+    return (n - 1) * (n * 8)  # n-1 adders of n bits (paper Section III)
+
+
+def rows():
+    out = []
+    for n in NS:
+        t = n // 2
+        acc = ripple_delay(n)
+        app = segmented_delay(n, t)
+        out.append({
+            "n": n, "t": t,
+            "latency_accurate": acc,
+            "latency_approx": app,
+            "latency_reduction_pct": 100 * (1 - app / acc),
+            "area_accurate": area_cells(n, False),
+            "area_approx": area_cells(n, True),
+            "area_overhead_pct": 100 * (area_cells(n, True) / area_cells(n, False) - 1),
+            "seq_vs_comb_area_savings_pct": 100 * (1 - area_cells(n, True) / combinatorial_area(n)) if n > 2 else 0.0,
+        })
+    return out
+
+
+def summary(rs):
+    red = [r["latency_reduction_pct"] for r in rs]
+    return {
+        "avg_latency_reduction_pct": sum(red) / len(red),
+        "max_latency_reduction_pct": max(red),
+        "max_area_overhead_pct": max(r["area_overhead_pct"] for r in rs),
+        "paper_fpga_avg_pct": 19.15,
+        "paper_fpga_max_pct": 29.0,
+        "paper_asic_avg_pct": 16.1,
+        "paper_asic_max_pct": 34.14,
+    }
+
+
+def main(emit) -> None:
+    rs = rows()
+    for r in rs:
+        emit("fig3_latency_area", r)
+    emit("fig3_summary", summary(rs))
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r)
+    print(summary(rows()))

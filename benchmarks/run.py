@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig2       # substring filter
+
+Emits ``table,key=value,...`` CSV-ish lines (one per row) so the output
+diffs cleanly across runs.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import error_tables, gemm_modes, latency_model, roofline_report
+
+MODULES = [
+    ("fig2_error_metrics", error_tables.main),
+    ("fig3_latency_area", latency_model.main),
+    ("gemm_modes", gemm_modes.main),
+    ("roofline", roofline_report.main),
+]
+
+
+def emit(table: str, row: dict) -> None:
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.6g}"
+        return str(v)
+
+    print(table + "," + ",".join(f"{k}={fmt(v)}" for k, v in row.items()), flush=True)
+
+
+def main() -> None:
+    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    failures = 0
+    for name, fn in MODULES:
+        if pattern and pattern not in name:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn(emit)
+        except Exception as e:  # noqa: BLE001 — report all benches
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Accuracy-configurability sweep: the paper's central knob.
+
+For each splitting point t of an 8-bit multiplier, reports circuit-level
+error metrics (paper Fig. 2), the analytic latency win (paper Fig. 3),
+AND the end-task effect: perplexity of a small trained LM evaluated with
+its MLPs quantized through the approximate multiplier at that t.
+
+  PYTHONPATH=src python examples/accuracy_sweep.py --steps 80
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.latency_model import ripple_delay, segmented_delay  # noqa: E402
+from repro.configs.base import TrainConfig
+from repro.configs.registry import apply_approx, get_config
+from repro.core import error_metrics
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.registry import build_model
+from repro.train.steps import init_train_state, loss_fn, make_train_step
+
+N = 8
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+
+    # ---- train a small exact model once
+    cfg = get_config("qwen3-0.6b").reduced(vocab_size=256)
+    model = build_model(cfg)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=10, total_steps=args.steps)
+    state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, tcfg), donate_argnums=0)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8))
+    for i in range(args.steps):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in data.batch(i).items()})
+    print(f"trained exact model: loss={float(m['loss']):.4f}\n")
+
+    # ---- evaluate through the approximate multiplier at each t
+    eval_batch = {k: jnp.asarray(v) for k, v in data.batch(10_000).items()}
+    print(f"{'t':>2} {'ER':>7} {'NMED':>10} {'latency_win%':>13} {'eval_loss':>10}")
+    for t in [None, 1, 2, 3, 4, 5, 6, 7]:
+        if t is None:
+            acfg, er, nmed, win = cfg, 0.0, 0.0, 0.0
+        else:
+            acfg = apply_approx(cfg, n=N, t=t, mode="bitexact")
+            rep = error_metrics.exhaustive_eval(N, t)
+            er, nmed = rep.er, rep.nmed
+            win = 100 * (1 - segmented_delay(N, t) / ripple_delay(N))
+        amodel = build_model(acfg)
+        loss, _ = jax.jit(lambda p, b: loss_fn(p, b, jax.random.PRNGKey(1), amodel))(
+            state.params, eval_batch)
+        label = "exact" if t is None else str(t)
+        print(f"{label:>2} {er:7.3f} {nmed:10.2e} {win:13.1f} {float(loss):10.4f}")
+
+
+if __name__ == "__main__":
+    main()

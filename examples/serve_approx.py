@@ -1,0 +1,16 @@
+"""Batched serving with approximate-multiplier MLPs: the inference-side
+deployment of the paper's technique (prefill + decode with KV caches,
+static continuous batching).  Thin wrapper over repro.launch.serve.
+
+  PYTHONPATH=src python examples/serve_approx.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen3-0.6b", "--reduced",
+                "--approx-mode", "lowrank", "--requests", "8", "--batch", "4",
+                "--gen", "16"] + sys.argv[1:]
+    serve.main()

@@ -1,0 +1,19 @@
+"""Yi-9B — llama-architecture dense decoder with GQA [arXiv:2403.04652]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    num_layers=48,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    layer_pattern=("attn_global",),
+    ffn_activation="silu",
+    rope_theta=5_000_000.0,
+    tie_embeddings=False,
+)

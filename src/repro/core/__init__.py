@@ -1,0 +1,17 @@
+"""Core contribution of the paper: the accuracy-configurable sequential
+multiplier via segmented carry chains, its error metrics/models, and the
+approximate-GEMM modes that carry it into the training/serving framework."""
+
+from repro.core.approx_matmul import Mode, approx_matmul, approx_matmul_int, error_moments
+from repro.core.error_metrics import ErrorReport, eval_pairs, exhaustive_eval, mc_eval
+from repro.core.error_model import estimate, mae_closed_form, max_ed_dropped_carry
+from repro.core.luts import error_lut, lut_stats, product_lut, svd_error_factors
+from repro.core.quantization import QuantParams, calibrate_absmax, dequantize, fake_quant, quantize
+from repro.core.seqmul import (
+    MAX_N,
+    ProductWords,
+    assemble_product_u64,
+    seq_mul_approx_u32,
+    seq_mul_exact_u32,
+    seq_mul_words,
+)

@@ -1,0 +1,93 @@
+"""Product / error lookup tables and their low-rank factorizations.
+
+The TPU-native analogue of the paper's LUT-fabric FPGA deployment: for
+n <= 8 the full 2^n x 2^n approximate-product table fits comfortably in
+VMEM (256 KiB at n=8, int32), so an approximate GEMM can gather scalar
+products instead of simulating the bit-serial datapath.
+
+Beyond the paper, we factor the *error* table E = approx - exact with a
+truncated SVD: E[a, b] ≈ Σ_r U[a, r] · V[b, r].  A dot-product against
+per-operand embeddings turns the error correction into an MXU matmul
+(see ``core.approx_matmul.lowrank_matmul``), trading bit-exactness for
+systolic-array throughput; the retained error-energy fraction is part of
+the report.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seqmul
+
+__all__ = [
+    "product_lut",
+    "error_lut",
+    "svd_error_factors",
+    "lut_stats",
+]
+
+
+@functools.lru_cache(maxsize=32)
+def _tables(n: int, t: int, fix_to_1: bool) -> tuple[np.ndarray, np.ndarray]:
+    if n > 10:
+        raise ValueError(f"LUT for n={n} would be 2^{2 * n} entries; cap is n<=10")
+    v = np.arange(1 << n, dtype=np.uint64)
+    a = np.repeat(v, 1 << n)
+    b = np.tile(v, 1 << n)
+    import jax
+
+    # LUTs are trace-time constants; the first construction may happen
+    # under a scan/jit trace (ApproxDense inside a scanned layer group),
+    # so force eager evaluation of the simulator call.
+    with jax.ensure_compile_time_eval():
+        w = seqmul.seq_mul_words(
+            jnp.asarray(a, jnp.uint32), jnp.asarray(b, jnp.uint32), n=n, t=t, approx=True, fix_to_1=fix_to_1
+        )
+        w = jax.tree_util.tree_map(np.asarray, w)
+    approx = seqmul.assemble_product_u64(w, n=n, t=t).reshape(1 << n, 1 << n)
+    exact = (a * b).reshape(1 << n, 1 << n)
+    return approx.astype(np.int64), (approx.astype(np.int64) - exact.astype(np.int64))
+
+
+def product_lut(n: int, t: int, *, fix_to_1: bool = True) -> np.ndarray:
+    """(2^n, 2^n) int32 table: LUT[a, b] = approx_product(a, b)."""
+    return _tables(n, t, fix_to_1)[0].astype(np.int32)
+
+
+def error_lut(n: int, t: int, *, fix_to_1: bool = True) -> np.ndarray:
+    """(2^n, 2^n) int32 table: E[a, b] = approx(a,b) - a*b."""
+    return _tables(n, t, fix_to_1)[1].astype(np.int32)
+
+
+def svd_error_factors(
+    n: int, t: int, rank: int, *, fix_to_1: bool = True
+) -> tuple[np.ndarray, np.ndarray, float]:
+    """Truncated-SVD factors of the error table.
+
+    Returns (U, V, energy): U (2^n, rank) f32, V (2^n, rank) f32 with
+    E ≈ U @ V.T, and the retained squared-Frobenius energy fraction.
+    """
+    e = _tables(n, t, fix_to_1)[1].astype(np.float64)
+    u, s, vt = np.linalg.svd(e, full_matrices=False)
+    rank = min(rank, s.size)
+    total = float((s**2).sum()) or 1.0
+    kept = float((s[:rank] ** 2).sum())
+    scale = np.sqrt(s[:rank])
+    return (
+        (u[:, :rank] * scale).astype(np.float32),
+        (vt[:rank].T * scale).astype(np.float32),
+        kept / total,
+    )
+
+
+def lut_stats(n: int, t: int, *, fix_to_1: bool = True) -> dict:
+    e = _tables(n, t, fix_to_1)[1]
+    return {
+        "nonzero_frac": float(np.count_nonzero(e) / e.size),
+        "mean_abs": float(np.abs(e).mean()),
+        "max_abs": int(np.abs(e).max()),
+        "vmem_bytes_product_lut": int(4 * (1 << (2 * n))),
+    }

@@ -1,0 +1,68 @@
+"""Integer quantization bridging real-valued tensors to the n-bit multiplier.
+
+The paper's multiplier is *unsigned* n x n -> 2n bit.  Real network
+tensors are signed, so we use sign-magnitude: quantize symmetrically to
+signed integers in (-2^n, 2^n), multiply magnitudes through the
+approximate unit, and re-apply the sign — exactly how the unsigned core
+would be wrapped in a signed datapath.
+
+``QuantParams`` carries per-tensor or per-channel scales; calibration is
+absmax (deterministic, reproducible).  ``fake_quant`` is the straight-
+through estimator used by approximate-aware training.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QuantParams", "calibrate_absmax", "quantize", "dequantize", "fake_quant"]
+
+
+class QuantParams(NamedTuple):
+    scale: jax.Array  # f32, broadcastable to the tensor
+    bits: int  # magnitude bit-width n (sign carried separately)
+
+
+def calibrate_absmax(x: jax.Array, *, bits: int, axis=None) -> QuantParams:
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    qmax = (1 << bits) - 1
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    return QuantParams(scale=scale.astype(jnp.float32), bits=bits)
+
+
+def quantize(x: jax.Array, qp: QuantParams) -> tuple[jax.Array, jax.Array]:
+    """Returns (magnitude uint32 in [0, 2^bits), sign int8 in {-1, 0, 1})."""
+    qmax = (1 << qp.bits) - 1
+    q = jnp.clip(jnp.round(x / qp.scale), -qmax, qmax)
+    return jnp.abs(q).astype(jnp.uint32), jnp.sign(q).astype(jnp.int8)
+
+
+def dequantize(mag: jax.Array, sign: jax.Array, qp: QuantParams) -> jax.Array:
+    return mag.astype(jnp.float32) * sign.astype(jnp.float32) * qp.scale
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(x: jax.Array, *, bits: int, axis=None) -> jax.Array:
+    """Straight-through fake quantization (QAT substrate)."""
+    qp = calibrate_absmax(jax.lax.stop_gradient(x), bits=bits, axis=axis)
+    qmax = (1 << bits) - 1
+    q = jnp.clip(_ste_round(x / qp.scale), -qmax, qmax)
+    return q * qp.scale

@@ -1,0 +1,158 @@
+"""Accuracy-configurable sequential multiplier via segmented carry chains.
+
+Fast word-packed implementation of the paper's sequential shift-add
+multiplier (Echavarria et al., 2021).  The n-cycle accumulate-and-shift
+recurrence is carried out with the accumulator *already split* at the
+splitting point ``t`` into an LSP word (t bits) and an MSP word
+(n - t + 1 bits, including the adder carry-out S_n).  The exact and the
+approximate multiplier are then the *same* recurrence, differing only in
+whether the LSP carry-out is consumed immediately (exact: within-cycle
+ripple across the split) or deferred by one clock cycle through the
+D flip-flop (approximate: the paper's segmented carry chain).
+
+Bit-exactness against the paper's boolean Ŝ/Ĉ recurrences is asserted in
+``tests/test_seqmul.py`` (cross-check vs. ``core.boolean_ref``).
+
+Supported bit-widths: 1 <= n <= 32 (every internal word then fits uint32;
+final products are assembled on host in uint64).  This covers the paper's
+exhaustive range (n <= 16) and its Monte-Carlo range (n = 32).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ProductWords",
+    "seq_mul_words",
+    "seq_mul_exact_u32",
+    "seq_mul_approx_u32",
+    "assemble_product_u64",
+    "MAX_N",
+]
+
+MAX_N = 32
+
+
+class ProductWords(NamedTuple):
+    """A 2n-bit product in split-word form (all uint32).
+
+    The product value is::
+
+        p = lo + 2**(n-1) * (s_lsp + 2**t * s_msp)
+
+    where ``lo`` holds product bits [0, n-1) (the bits shifted out of the
+    accumulator), ``s_lsp``/``s_msp`` hold the final accumulator
+    S^{n-1} = product bits [n-1, 2n].  ``c_last`` is the LSP carry-out of
+    the final accumulation, Ĉ_{t-1}^{n-1} (always 0 for the exact
+    multiplier); it drives the fix-to-1 multiplexers.
+    """
+
+    lo: jax.Array
+    s_lsp: jax.Array
+    s_msp: jax.Array
+    c_last: jax.Array
+
+
+def _validate(n: int, t: int) -> None:
+    if not (1 <= n <= MAX_N):
+        raise ValueError(f"bit-width n={n} out of supported range [1, {MAX_N}]")
+    if not (1 <= t <= n - 1):
+        raise ValueError(f"splitting point t={t} must satisfy 1 <= t <= n-1={n - 1}")
+
+
+def seq_mul_words_impl(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    n: int,
+    t: int,
+    approx: bool,
+    fix_to_1: bool = True,
+) -> ProductWords:
+    """Run the n-cycle sequential multiplication, vectorized elementwise.
+
+    Args:
+      a: multiplier, uint32, any shape, values in [0, 2**n).
+      b: multiplicand, uint32, same shape as ``a``.
+      n: operand bit-width.
+      t: splitting point (LSP is t bits wide).  For ``approx=False`` the
+        result is independent of ``t`` (the split add with an immediate
+        carry is an exact add); we keep the parameter so exact/approx share
+        one code path.
+      approx: defer the LSP carry-out by one cycle (segmented carry chain).
+      fix_to_1: on a final-cycle LSP carry-out, force product bits
+        [0, n+t) to 1 (the paper's error-compensation multiplexers).
+        Ignored for the exact multiplier.
+    """
+    _validate(n, t)
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    m_t = jnp.uint32((1 << t) - 1)
+    one = jnp.uint32(1)
+    zero = jnp.zeros_like(a)
+
+    def cycle(j, state):
+        s_lsp, s_msp, c_ff, lo = state
+        b_j = (b >> j.astype(jnp.uint32)) & one
+        m = jnp.where(b_j.astype(bool), a, zero)
+        m_lsp = m & m_t
+        m_msp = m >> t
+        # augend = S^{j-1} >> 1 (bit t-1 of the LSP receives bit t = MSP LSB)
+        aug_lsp = (s_lsp >> 1) | ((s_msp & one) << (t - 1))
+        aug_msp = s_msp >> 1
+        lsum = aug_lsp + m_lsp  # t+1 bits
+        c_out = lsum >> t  # Ĉ_{t-1}^{j}: LSP carry-out of this cycle
+        # exact: consume the LSP carry now; approx: consume last cycle's.
+        c_in = c_ff if approx else c_out
+        msum = aug_msp + m_msp + c_in  # n-t+1 bits (incl. S_n)
+        lo = lo | ((lsum & one) << j.astype(jnp.uint32))
+        return lsum & m_t, msum, c_out, lo
+
+    init = (zero, zero, zero, zero)
+    s_lsp, s_msp, c_last, lo = jax.lax.fori_loop(0, n, cycle, init)
+    lo = lo & jnp.uint32((1 << (n - 1)) - 1) if n > 1 else jnp.zeros_like(lo)
+
+    if approx and fix_to_1:
+        hit = c_last.astype(bool)
+        lo = jnp.where(hit, jnp.uint32((1 << (n - 1)) - 1) if n > 1 else jnp.uint32(0), lo)
+        s_lsp = jnp.where(hit, m_t, s_lsp)
+        s_msp = jnp.where(hit, s_msp | one, s_msp)
+    return ProductWords(lo, s_lsp, s_msp, c_last)
+
+
+seq_mul_words = jax.jit(
+    seq_mul_words_impl, static_argnames=("n", "t", "approx", "fix_to_1")
+)
+
+
+def assemble_product_u64(words: ProductWords, *, n: int, t: int) -> np.ndarray:
+    """Host-side assembly of the 2n-bit product into numpy uint64."""
+    lo = np.asarray(words.lo, np.uint64)
+    s = np.asarray(words.s_lsp, np.uint64) + (np.asarray(words.s_msp, np.uint64) << np.uint64(t))
+    return lo + (s << np.uint64(n - 1))
+
+
+def _packed(a, b, n, t, approx, fix_to_1):
+    if 2 * n > 31:
+        raise ValueError(f"packed u32 product needs 2n <= 31 bits, got n={n}; use seq_mul_words")
+    w = seq_mul_words(a, b, n=n, t=t, approx=approx, fix_to_1=fix_to_1)
+    s = w.s_lsp + (w.s_msp << t)
+    return w.lo + (s << (n - 1))
+
+
+def seq_mul_exact_u32(a: jax.Array, b: jax.Array, *, n: int) -> jax.Array:
+    """Exact sequential product packed into a single uint32 (n <= 15)."""
+    return _packed(a, b, n, max(1, n // 2), approx=False, fix_to_1=False)
+
+
+def seq_mul_approx_u32(
+    a: jax.Array, b: jax.Array, *, n: int, t: int, fix_to_1: bool = True
+) -> jax.Array:
+    """Approximate (segmented carry chain) product packed in uint32 (n <= 15)."""
+    return _packed(a, b, n, t, approx=True, fix_to_1=fix_to_1)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused exact GEMM + low-rank error-correction GEMM.
+
+Beyond-paper optimization (DESIGN.md §2): with E = approx - exact factored
+as E ≈ U V^T (rank r), the approximate GEMM becomes
+
+    C[i,j] = Σ_k a·b  +  Σ_k Σ_r (s_a U[|a|])[i,k,r] (s_b V[|b|])[k,j,r]
+           = A @ B    +  Ue' @ Ve'        (Ue' (M, K·r), Ve' (K·r, N))
+
+i.e. two MXU matmuls instead of per-element VPU gathers.  Fusing them in
+one kernel keeps a single f32 accumulator tile in VMEM and reads the
+operand tiles once — halving accumulator HBM traffic vs. running the two
+GEMMs separately.
+
+Operand embeddings (Ue, Ve) are gathered outside the kernel (O(M·K·r)
+bytes, a one-time layout cost analogous to weight preprocessing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _kernel(a_ref, b_ref, ue_ref, ve_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    acc += jnp.dot(ue_ref[...], ve_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "bm", "bn", "bk", "interpret"))
+def lowrank_matmul_pallas(
+    a: jax.Array,  # (M, K) f32 — signed quantized integer values
+    b: jax.Array,  # (K, N) f32
+    ue: jax.Array,  # (M, K, r) f32 — s_a * U[|a|]
+    ve: jax.Array,  # (K, N, r) f32 — s_b * V[|b|]
+    *,
+    rank: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    m_dim, k_dim = a.shape
+    _, n_dim = b.shape
+    # flatten (K, r) so the correction is a plain (M, K·r)x(K·r, N) GEMM;
+    # K-blocking then walks both contractions in lock-step.
+    ue2 = ue.reshape(m_dim, k_dim * rank)
+    ve2 = jnp.swapaxes(ve, 0, 1).reshape(n_dim, k_dim * rank).T  # (K·r, N)
+
+    def pad2(x, r, c):
+        return jnp.pad(jnp.asarray(x, jnp.float32), ((0, -x.shape[0] % r), (0, -x.shape[1] % c)))
+
+    ap = pad2(a, bm, bk)
+    bp = pad2(b, bk, bn)
+    uep = pad2(ue2, bm, bk * rank)
+    vep = pad2(ve2, bk * rank, bn)
+    mp, kp, np_ = ap.shape[0], ap.shape[1], bp.shape[1]
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bk * rank), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk * rank, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(ap, bp, uep, vep)
+    return out[:m_dim, :n_dim]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: approximate GEMM via a VMEM-resident product LUT.
+
+TPU adaptation of the paper's LUT-fabric deployment: the full
+(2^n, 2^n) approximate-product table (256 KiB at n=8, int32) is pinned in
+VMEM once per core; each (BM, BK)x(BK, BN) tile contraction gathers its
+scalar products from the table instead of re-simulating the bit-serial
+datapath.  Signs ride separately (sign-magnitude wrapper of the unsigned
+multiplier), applied as an f32 rank-1 product before the K-reduction.
+
+Grid is (M/BM, N/BN, K/BK) with the K axis innermost and the output block
+revisited across K (init at k==0, accumulate after) — the classic Pallas
+reduction pattern, keeping one f32 accumulator tile live in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 64
+DEFAULT_BN = 64
+DEFAULT_BK = 64
+
+
+def _kernel(lut_ref, ma_ref, sa_ref, mb_ref, sb_ref, o_ref, *, n: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ma = ma_ref[...].astype(jnp.int32)  # (BM, BK)
+    mb = mb_ref[...].astype(jnp.int32)  # (BK, BN)
+    idx = ma[:, :, None] * (1 << n) + mb[None, :, :]  # (BM, BK, BN)
+    prod = jnp.take(lut_ref[...].reshape(-1), idx, axis=0).astype(jnp.float32)
+    signs = sa_ref[...][:, :, None] * sb_ref[...][None, :, :]
+    o_ref[...] += (prod * signs).sum(axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "bm", "bn", "bk", "interpret")
+)
+def lut_matmul_pallas(
+    lut: jax.Array,
+    mag_a: jax.Array,
+    sign_a: jax.Array,
+    mag_b: jax.Array,
+    sign_b: jax.Array,
+    *,
+    n: int = 8,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """(M, K) x (K, N) -> (M, N) f32 approximate GEMM.
+
+    lut: (2^n * 2^n,) or (2^n, 2^n) int32 product table.
+    mag_*: uint32 magnitudes in [0, 2^n); sign_*: f32/int8 in {-1, 0, 1}.
+    """
+    m_dim, k_dim = mag_a.shape
+    k2, n_dim = mag_b.shape
+    assert k_dim == k2, (mag_a.shape, mag_b.shape)
+    lut = lut.reshape(1 << n, 1 << n)
+
+    def pad2(x, r, c, dt):
+        x = jnp.asarray(x, dt)
+        return jnp.pad(x, ((0, -x.shape[0] % r), (0, -x.shape[1] % c)))
+
+    ma = pad2(mag_a, bm, bk, jnp.uint32)
+    sa = pad2(sign_a, bm, bk, jnp.float32)
+    mb = pad2(mag_b, bk, bn, jnp.uint32)
+    sb = pad2(sign_b, bk, bn, jnp.float32)
+    mp, kp, np_ = ma.shape[0], ma.shape[1], mb.shape[1]
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1 << n, 1 << n), lambda i, j, k: (0, 0)),  # LUT: whole
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(lut, ma, sa, mb, sb)
+    return out[:m_dim, :n_dim]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function computes exactly what the corresponding kernel must produce
+(same dtypes, same padding-free semantics); the kernel tests sweep shapes,
+bit-widths and splitting points and assert allclose/bit-equality.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_matmul import approx_matmul_int
+from repro.core import seqmul as _sm
+
+
+def seqmul_ref(
+    a: jax.Array, b: jax.Array, *, n: int, t: int, approx: bool = True, fix_to_1: bool = True
+) -> jax.Array:
+    """Packed-u32 elementwise (approximate) sequential product, 2n <= 31."""
+    w = _sm.seq_mul_words(
+        jnp.asarray(a, jnp.uint32), jnp.asarray(b, jnp.uint32), n=n, t=t, approx=approx, fix_to_1=fix_to_1
+    )
+    s = w.s_lsp + (w.s_msp << t)
+    return w.lo + (s << (n - 1))
+
+
+def lut_matmul_ref(
+    mag_a: jax.Array,
+    sign_a: jax.Array,
+    mag_b: jax.Array,
+    sign_b: jax.Array,
+    *,
+    n: int,
+    t: int,
+    fix_to_1: bool = True,
+) -> jax.Array:
+    """Bit-exact signed approximate GEMM oracle (gather + reduce in jnp)."""
+    return approx_matmul_int(
+        jnp.asarray(mag_a, jnp.uint32),
+        jnp.asarray(sign_a),
+        jnp.asarray(mag_b, jnp.uint32),
+        jnp.asarray(sign_b),
+        n=n,
+        t=t,
+        fix_to_1=fix_to_1,
+    )
+
+
+def lowrank_matmul_ref(a, b, ue, ve) -> jax.Array:
+    """Exact GEMM + low-rank correction oracle."""
+    exact = jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32)
+    corr = jnp.einsum("ikr,kjr->ij", jnp.asarray(ue, jnp.float32), jnp.asarray(ve, jnp.float32))
+    return exact + corr

@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh (single-pod 16×16 = 256
+chips, or multi-pod 2×16×16 = 512), lowers the appropriate step
+(train_step for train shapes, prefill/decode for serving shapes) against
+ShapeDtypeStruct inputs with the framework's sharding rules, compiles it,
+and extracts:
+
+  - memory_analysis()  — per-device bytes: proves the cell fits HBM,
+  - hlo_analysis       — loop-multiplicity-correct per-device HLO FLOPs,
+    HBM-traffic bytes, and per-kind collective bytes parsed from the
+    post-SPMD compiled HLO (XLA's cost_analysis() counts while bodies
+    once; see launch/hlo_analysis.py),
+  - cost_analysis()    — kept as a secondary record,
+
+and derives the three roofline terms (EXPERIMENTS.md §Roofline):
+
+  compute  = FLOPs_per_device / PEAK_FLOPS
+  memory   = bytes_per_device / HBM_BW
+  collect. = collective_bytes_per_device / ICI_BW
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results.jsonl
+"""
+
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, TrainConfig
+from repro.configs.registry import get_config, list_archs, shapes_for
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch import specs as S
+from repro.models.registry import build_model
+from repro.train import steps as tsteps
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference) useful-FLOPs floor."""
+    # active params: embeddings excluded (lookup), MoE counts top-k experts
+    d, L = cfg.d_model, cfg.num_layers
+    attn = 0
+    if cfg.num_heads:
+        attn = d * cfg.head_dim * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    if cfg.num_experts:
+        ffn = 3 * d * cfg.moe_d_ff * cfg.num_experts_per_tok
+    elif cfg.d_ff:
+        ffn = 3 * d * cfg.d_ff
+    else:
+        ffn = 0
+    if "rglru" in cfg.layer_pattern:
+        w = cfg.lru_width
+        rec = 2 * d * w + 2 * w * w + w * d
+        n_rec = sum(k == "rglru" for k in cfg.layer_pattern) / len(cfg.layer_pattern)
+        n_att = 1 - n_rec
+        per_layer = n_rec * (rec + ffn) + n_att * (attn + ffn)
+    elif "ssd" in cfg.layer_pattern:
+        di = cfg.d_inner or 2 * d
+        per_layer = d * (2 * di + 2 * cfg.ssm_state + (cfg.ssm_heads or 1)) + di * d
+    else:
+        per_layer = attn + ffn
+    n_active = L * per_layer
+    if cfg.is_encdec:
+        n_active += cfg.encoder_layers * (attn + ffn) + L * attn  # enc + cross
+    n_active += cfg.d_model * cfg.vocab_size  # lm head matmul is real compute
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def _step_kind(shape) -> str:
+    return shape.kind
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *, extra: dict | None = None,
+               accum: int = 1, fsdp: bool = True, approx_mode: str | None = None):
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_config(arch, **(extra or {}))
+    if approx_mode:
+        from repro.configs.registry import apply_approx
+        cfg = apply_approx(cfg, mode=approx_mode)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    kind = _step_kind(shape)
+    t0 = time.time()
+
+    with jax.sharding.set_mesh(mesh):
+        if kind == "train":
+            tcfg = TrainConfig(grad_accum=accum)
+            state_shapes = jax.eval_shape(
+                lambda: tsteps.init_train_state(model, tcfg, jax.random.PRNGKey(0))
+            )
+            state_sh = S.state_shardings(state_shapes, mesh, fsdp=fsdp)
+            batch_shapes = S.input_specs(cfg, shape)
+            batch_sh = S.batch_shardings(batch_shapes, mesh)
+            step = tsteps.make_train_step(model, tcfg)
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh), donate_argnums=0
+            ).lower(state_shapes, batch_shapes)
+        else:
+            params_shapes = jax.eval_shape(
+                lambda: model.init_params(jax.random.PRNGKey(0))
+            )
+            params_sh = S.params_shardings(params_shapes, mesh)
+            if kind == "prefill":
+                batch_shapes = S.input_specs(cfg, shape)
+                batch_sh = S.batch_shardings(batch_shapes, mesh)
+                prefill = tsteps.make_prefill_step(
+                    model, shape.seq_len, mem_len=shape.seq_len if cfg.is_encdec else 0
+                )
+                lowered = jax.jit(prefill, in_shardings=(params_sh, batch_sh)).lower(
+                    params_shapes, batch_shapes
+                )
+            else:  # decode
+                mem_len = S.ENC_MEM_LEN_DECODE if cfg.is_encdec else 0
+                cache_shapes = jax.eval_shape(
+                    functools.partial(
+                        model.init_caches,
+                        shape.global_batch,
+                        shape.seq_len,
+                        jnp.dtype(cfg.dtype),
+                        mem_len=mem_len,
+                    )
+                )
+                cache_sh = S.cache_shardings(cache_shapes, mesh)
+                dspecs = S.decode_input_specs(cfg, shape)
+                tok_sh = S.batch_shardings(dspecs["token"], mesh)
+                repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+                decode = tsteps.make_decode_step(model)
+                lowered = jax.jit(
+                    decode,
+                    in_shardings=(params_sh, cache_sh, tok_sh, repl),
+                    donate_argnums=1,
+                ).lower(params_shapes, cache_shapes, dspecs["token"], dspecs["pos"])
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ana = analyze_hlo(hlo)
+    coll = {k: float(v) for k, v in ana.collective_bytes.items()}
+    coll_total = ana.collective_total
+    chips = 512 if multi_pod else 256
+
+    flops = ana.flops
+    bytes_acc = ana.bytes
+    t_compute = flops / HW.PEAK_FLOPS
+    t_memory = bytes_acc / HW.HBM_BW
+    t_coll = coll_total / HW.ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, kind)
+    mf_per_dev = mf / chips
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips,
+        "kind": kind,
+        "grad_accum": accum if kind == "train" else None,
+        "fsdp": fsdp,
+        "approx_mode": approx_mode,
+        "ok": True,
+        "compile_s": round(time.time() - t0, 1),
+        "mem": {
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "arg_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "out_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "flops_per_dev": flops,
+        "bytes_per_dev": bytes_acc,
+        "xla_cost_flops": float(cost.get("flops", 0.0)),  # loop-undercounted
+        "collective_bytes_per_dev": coll,
+        "top_collectives": [
+            {"op": r.opcode, "bytes": r.bytes, "mult": r.mult, "src": r.meta[:120]}
+            for r in ana.top_collectives(6)
+        ],
+        "top_bytes": [
+            {"op": r.opcode, "bytes": r.bytes, "mult": r.mult, "src": r.meta[:120]}
+            for r in ana.top_bytes(6)
+        ],
+        "collective_total": coll_total,
+        "terms_s": terms,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "useful_ratio": (mf_per_dev / flops) if flops else None,
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (mf_per_dev / HW.PEAK_FLOPS) / max(max(terms.values()), 1e-30),
+    }
+    return rec
+
+
+# Per-arch settings for the optimized (--perf) matrix run, chosen by the
+# hillclimb: microbatching for dense trains (activation temp / accum),
+# sequence-sharded residuals + accum=1 for kimi (FSDP re-gathers grow with
+# accum at 1T params — measured tradeoff in EXPERIMENTS.md §Perf).
+PERF_SETTINGS = {
+    "kimi-k2-1t-a32b": dict(accum=1, extra={"seq_shard_residuals": True}),
+    "granite-moe-1b-a400m": dict(accum=4),
+}
+DEFAULT_TRAIN_ACCUM = 8
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches for train cells")
+    ap.add_argument("--perf", action="store_true",
+                    help="apply the per-arch PERF_SETTINGS (optimized matrix)")
+    ap.add_argument("--fsdp", choices=["on", "off"], default="on",
+                    help="ZeRO-3 param/opt sharding over the data axis")
+    ap.add_argument("--approx-mode", default=None, help="deploy the paper technique")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            cfg = get_config(arch)
+            for sname in shapes_for(cfg):
+                cells.append((arch, sname))
+    else:
+        cells.append((args.arch, args.shape))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_f = open(args.out, "a") if args.out else None
+    n_fail = 0
+    for arch, sname in cells:
+        for mp in meshes:
+            try:
+                accum, extra = args.accum, None
+                if args.perf and SHAPES[sname].kind == "train":
+                    st = PERF_SETTINGS.get(arch, {})
+                    accum = st.get("accum", DEFAULT_TRAIN_ACCUM)
+                    extra = st.get("extra")
+                rec = lower_cell(arch, sname, mp, extra=extra, accum=accum,
+                                 fsdp=args.fsdp == "on",
+                                 approx_mode=args.approx_mode)
+            except Exception as e:  # noqa: BLE001 — report, continue
+                rec = {
+                    "arch": arch, "shape": sname,
+                    "mesh": "multi" if mp else "single",
+                    "ok": False, "error": f"{type(e).__name__}: {e}",
+                }
+                traceback.print_exc()
+                n_fail += 1
+            line = json.dumps(rec)
+            print(line, flush=True)
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+    if out_f:
+        out_f.close()
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

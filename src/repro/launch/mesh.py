@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — required because the dry-run
+must set XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; ×2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices this host actually has: (data=n, model=1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+class HW:
+    """TPU v5e-class hardware constants for the roofline terms."""
+
+    PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+    HBM_BW = 819e9  # B/s per chip
+    ICI_BW = 50e9  # B/s per link (per-chip collective bandwidth proxy)
+    VMEM_BYTES = 128 * 1024 * 1024

@@ -1,0 +1,130 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs for every
+(architecture × shape × step-kind) cell.
+
+``input_specs(cfg, shape)`` mirrors the shannon/kernels pattern: weak-
+type-correct, shardable, zero device allocation.  ``batch_specs`` /
+``state_shardings`` / ``cache_shardings`` produce the NamedSharding trees
+the dry-run lowers against.
+
+Cache sharding heuristic (degrades per-dim via ``resolve_spec`` when a
+dimension doesn't divide the mesh axis):
+  trailing 4 dims  (B, S, KV, hd) or (B, H, P, N) -> (DP, TP, None, None)
+    — shards the KV-cache *sequence* axis (flash-decode) or the SSM head
+      axis over the model axis, and batch over data.
+  trailing 3 dims  (B, K-1, C)                    -> (DP, None, TP)
+  trailing 2 dims  (B, W)                         -> (DP, TP)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import DP, TP, mesh_axis_sizes, param_specs, resolve_spec
+
+__all__ = [
+    "ENC_MEM_LEN_DECODE",
+    "input_specs",
+    "batch_shardings",
+    "state_shardings",
+    "cache_shardings",
+    "params_shardings",
+]
+
+# encoder-memory length for enc-dec *decode* cells (source is fixed while
+# the decoder streams); train/prefill cells use src_len == seq_len.
+ENC_MEM_LEN_DECODE = 4096
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch ShapeDtypeStructs for a *train or prefill* step."""
+    gb, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if cfg.is_encdec:
+        out["tokens"] = _sds((gb, s), jnp.int32)
+        out["src_embeds"] = _sds((gb, s, cfg.d_model), cfg.dtype)
+        out["src_pos"] = _sds((gb, s), jnp.int32)
+    elif cfg.frontend:  # vlm: precomputed patch embeddings for the stream
+        out["embeds"] = _sds((gb, s, cfg.d_model), cfg.dtype)
+        out["tokens"] = _sds((gb, s), jnp.int32)
+    else:
+        out["tokens"] = _sds((gb, s), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = _sds((gb, s), jnp.int32)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    gb = shape.global_batch
+    return {"token": _sds((gb, 1), jnp.int32), "pos": _sds((), jnp.int32)}
+
+
+# ------------------------------------------------------------- shardings
+def _named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def batch_shardings(batch_tree: Any, mesh) -> Any:
+    sizes = mesh_axis_sizes(mesh)
+
+    def one(x):
+        spec = (DP,) + (None,) * (x.ndim - 1) if x.ndim else ()
+        return _named(mesh, resolve_spec(spec, x.shape, sizes))
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def params_shardings(params_tree: Any, mesh, *, fsdp: bool = True) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: _named(mesh, s), param_specs(params_tree, mesh, fsdp=fsdp)
+    )
+
+
+def cache_shardings(cache_tree: Any, mesh) -> Any:
+    sizes = mesh_axis_sizes(mesh)
+
+    def one(x):
+        nd = x.ndim
+        if nd >= 4:
+            spec = (None,) * (nd - 4) + (DP, TP, None, None)
+        elif nd == 3:
+            spec = (DP, None, TP)
+        elif nd == 2:
+            spec = (DP, TP)
+        else:
+            spec = (None,) * nd
+        return _named(mesh, resolve_spec(spec, x.shape, sizes))
+
+    return jax.tree_util.tree_map(one, cache_tree)
+
+
+def state_shardings(state_shapes: Any, mesh, *, fsdp: bool = True) -> Any:
+    """Shardings for a TrainState shape tree (params + mirrored opt)."""
+    repl = _named(mesh, P())
+    p_sh = params_shardings(state_shapes.params, mesh, fsdp=fsdp)
+
+    def mirror(tree):
+        # mu/nu have the params' structure; _Q8 leaves (code, scale) would
+        # need their own layout — the dry-run baseline uses 32-bit states.
+        return jax.tree_util.tree_map(
+            lambda s, x: s if x.ndim else repl, p_sh, tree
+        )
+
+    return state_shapes._replace(
+        params=p_sh,
+        opt=state_shapes.opt._replace(
+            step=repl, mu=mirror(state_shapes.opt.mu), nu=mirror(state_shapes.opt.nu)
+        ),
+        comp=None,
+        rng=repl,
+        step=repl,
+    )

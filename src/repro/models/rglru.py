@@ -1,0 +1,145 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block:  x -> [in_x proj -> causal conv1d -> RG-LRU]  *  gelu(in_gate proj)
+          -> out proj
+
+RG-LRU recurrence (De et al., 2024):
+    r_t = sigmoid(x_t W_r + b_r)              recurrence gate
+    i_t = sigmoid(x_t W_i + b_i)              input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)    per-channel decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the linear recurrence with a log-depth
+``jax.lax.associative_scan`` (this is what makes long_500k prefill
+feasible); decode is the O(1) single-step update on a carried state.
+
+The in/gate/out projections route through the approximate multiplier; the
+recurrence itself stays exact — it is the *accumulator*, the analogue of
+the paper's shift registers, which the paper never approximates.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import DP, TP, constrain
+from repro.models import layers
+from repro.models.layers import Ctx
+
+__all__ = ["RGLRUCache", "init_rglru", "rglru_block", "init_rglru_cache"]
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    conv: jax.Array  # (B, conv_width - 1, W) trailing inputs
+    h: jax.Array  # (B, W) recurrent state
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    w = cfg.lru_width
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    lam = jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, w)))  # softplus^-1 of decays
+    return {
+        "in_x": layers.init_dense(ks[0], d, w, dtype),
+        "in_gate": layers.init_dense(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "lru_a": lam.astype(jnp.float32),  # Lambda (softplus -> decay rate)
+        "lru_gate_w": (jax.random.normal(ks[3], (w, w), jnp.float32) * w**-0.5).astype(dtype),
+        "lru_gate_b": jnp.zeros((w,), dtype),
+        "lru_in_w": (jax.random.normal(ks[4], (w, w), jnp.float32) * w**-0.5).astype(dtype),
+        "lru_in_b": jnp.zeros((w,), dtype),
+        "out_proj": layers.init_dense(ks[5], w, d, dtype),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> RGLRUCache:
+    return RGLRUCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+        h=jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 cache: Optional[jax.Array]) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv1d.  x: (B, S, W); w: (K, W)."""
+    k = w.shape[0]
+    if cache is not None:
+        ctx_in = jnp.concatenate([cache.astype(x.dtype), x], axis=1)  # (B, K-1+S, W)
+        new_cache = ctx_in[:, -(k - 1):, :] if k > 1 else cache
+    else:
+        ctx_in = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_cache = None
+    out = jnp.zeros_like(x, shape=x.shape)
+    s = x.shape[1]
+    out = sum(
+        ctx_in[:, i : i + s, :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :], new_cache
+
+
+def _rglru_scan(xb: jax.Array, a_t: jax.Array, i_t: jax.Array,
+                h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    xb, a_t, i_t: (B, S, W) f32.  Returns (h over S, final h).
+    """
+    b_t = jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 0.0)) * (i_t * xb)
+    # fold the initial state into the first element
+    b_t = b_t.at[:, 0, :].add(a_t[:, 0, :] * h0)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a_all, h_all = jax.lax.associative_scan(comb, (a_t, b_t), axis=1)
+    return h_all, h_all[:, -1, :]
+
+
+def rglru_block(
+    params: dict,
+    x: jax.Array,
+    ctx: Ctx,
+    cache: Optional[RGLRUCache] = None,
+) -> tuple[jax.Array, Optional[RGLRUCache]]:
+    """x: (B, S, d_model) -> (out, new_cache)."""
+    xb = layers.dense(x, params["in_x"], ctx, "mlp")  # (B, S, W)
+    gb = layers.dense(x, params["in_gate"], ctx, "mlp")
+    xb = constrain(xb, DP, None, TP)
+
+    conv_cache = cache.conv if cache is not None else None
+    xb, new_conv = _causal_conv(xb, params["conv_w"], params["conv_b"], conv_cache)
+
+    xb32 = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        xb32 @ params["lru_gate_w"].astype(jnp.float32) + params["lru_gate_b"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        xb32 @ params["lru_in_w"].astype(jnp.float32) + params["lru_in_b"].astype(jnp.float32)
+    )
+    log_a = -_C * jax.nn.softplus(params["lru_a"]) * r  # (B, S, W)
+    a_t = jnp.exp(log_a)
+
+    if cache is not None and x.shape[1] == 1:
+        # O(1) decode step
+        a1, i1, x1 = a_t[:, 0], i[:, 0], xb32[:, 0]
+        h = a1 * cache.h + jnp.sqrt(jnp.maximum(1.0 - a1 * a1, 0.0)) * (i1 * x1)
+        h_seq = h[:, None, :]
+    else:
+        h0 = cache.h if cache is not None else jnp.zeros(
+            (x.shape[0], ctx.cfg.lru_width), jnp.float32
+        )
+        h_seq, h = _rglru_scan(xb32, a_t, i, h0)
+
+    out = h_seq.astype(x.dtype) * jax.nn.gelu(gb, approximate=True)
+    out = constrain(out, DP, None, TP)
+    out = layers.dense(out, params["out_proj"], ctx, "mlp")
+    new_cache = RGLRUCache(new_conv, h) if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,191 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked matmul formulation.
+
+The selective state-space recurrence
+
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * B_t x_t^T        (per head)
+    y_t = C_t . S_t + D * x_t
+
+is evaluated in the SSD "chunked" form (Dao & Gu, 2024): the sequence is
+split into chunks of length L; within a chunk the output is an
+attention-like quadratic matmul against a decay-masked Gram matrix
+(MXU-friendly), and across chunks a *linear* recurrence over O(S/L)
+chunk states is evaluated with a log-depth associative scan — which is
+what makes the 500k-token shapes tractable.
+
+Decode carries (conv state, SSM state (B, H, P, N)) and is O(1) per token.
+In/out projections route through the approximate multiplier; the state
+update stays exact (the accumulator, per DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import DP, TP, constrain
+from repro.models import layers
+from repro.models.layers import Ctx
+
+__all__ = ["SSDCache", "init_ssd", "ssd_block", "init_ssd_cache"]
+
+
+class SSDCache(NamedTuple):
+    conv: jax.Array  # (B, conv_width - 1, d_conv_channels)
+    state: jax.Array  # (B, H, P, N) f32
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.d_inner or 2 * cfg.d_model
+    heads = cfg.ssm_heads or d_inner // cfg.ssm_head_dim
+    return d_inner, heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssd(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, h, p, n = _dims(cfg)
+    conv_ch = d_inner + 2 * n  # x, B, C all pass the causal conv
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": layers.init_dense(ks[0], d, in_dim, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "ssm_a": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),  # A = -exp(.)
+        "ssm_d": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(jnp.float32),
+        "out_proj": layers.init_dense(ks[3], d_inner, d, dtype),
+    }
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype) -> SSDCache:
+    d_inner, h, p, n = _dims(cfg)
+    return SSDCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_inner + 2 * n), dtype),
+        state=jnp.zeros((batch, h, p, n), jnp.float32),
+    )
+
+
+def _segsum(z: jax.Array) -> jax.Array:
+    """(..., L) -> (..., L, L) lower-tri cumulative sums: out[i,j] = sum_{j<k<=i} z_k."""
+    l = z.shape[-1]
+    cs = jnp.cumsum(z, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, a, b_in, c_in, chunk: int):
+    """Chunked SSD.
+
+    xh: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) (negative);
+    b_in, c_in: (B, S, N).  Returns (y (B, S, H, P), final state (B, H, P, N)).
+    """
+    bsz, s, h, p = xh.shape
+    n = b_in.shape[-1]
+    l = min(chunk, s)
+    pad = (-s) % l
+    if pad:
+        # zero-pad the tail: dt=0 makes padded steps identity on the state
+        # (decay exp(0)=1, zero injection), so the final state is exact.
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // l
+
+    xc = xh.reshape(bsz, nc, l, h, p)
+    dtc = dt.reshape(bsz, nc, l, h)
+    bc = b_in.reshape(bsz, nc, l, n)
+    cc = c_in.reshape(bsz, nc, l, n)
+
+    da = dtc * a[None, None, None, :]  # (B, C, L, H) log-decay increments
+    da_cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative
+    da_total = da_cum[:, :, -1, :]  # (B, C, H)
+
+    # ---- intra-chunk (quadratic, MXU): Y[i] = sum_{j<=i} C_i.B_j exp(seg) dt_j x_j
+    seg = _segsum(jnp.moveaxis(da, 2, 3))  # (B, C, H, L, L)
+    gram = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B, C, L, L)
+    m = gram[:, :, None, :, :] * jnp.exp(seg)  # (B, C, H, L, L)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", m, dtc, xc)
+
+    # ---- chunk states: S_c = sum_j exp(da_total - da_cum_j) dt_j B_j x_j^T
+    decay_state = jnp.exp(da_total[:, :, None, :] - da_cum)  # (B, C, L, H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bc, decay_state * dtc, xc)
+
+    # ---- inter-chunk linear recurrence over C (associative scan, log depth)
+    decay_chunk = jnp.exp(da_total)  # (B, C, H)
+
+    def comb(left, right):
+        al, sl = left
+        ar, sr = right
+        return al * ar, sl * ar[..., None, None] + sr
+
+    a_all, s_all = jax.lax.associative_scan(comb, (decay_chunk, states), axis=1)
+    # state entering chunk c is s_all[c-1]
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_all[:, :1]), s_all[:, :-1]], axis=1
+    )  # (B, C, H, P, N)
+
+    # ---- inter-chunk output: y_off[i] = C_i . (exp(da_cum_i) S_prev)
+    decay_out = jnp.exp(da_cum)  # (B, C, L, H)
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", cc, s_prev, decay_out)
+
+    y = (y_intra + y_inter).reshape(bsz, s_pad, h, p)[:, :s]
+    return y, s_all[:, -1]  # final state (B, H, P, N)
+
+
+def ssd_block(
+    params: dict,
+    x: jax.Array,
+    ctx: Ctx,
+    cache: Optional[SSDCache] = None,
+) -> tuple[jax.Array, Optional[SSDCache]]:
+    """x: (B, S, d_model) -> (out, new_cache)."""
+    cfg = ctx.cfg
+    d_inner, h, p, n = _dims(cfg)
+    bsz, s, _ = x.shape
+
+    zxbcdt = layers.dense(x, params["in_proj"], ctx, "mlp")
+    z, xr, b_in, c_in, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xr, b_in, c_in], axis=-1)
+
+    # causal depthwise conv (shared with rglru implementation style)
+    from repro.models.rglru import _causal_conv
+
+    conv_cache = cache.conv if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"], params["conv_b"], conv_cache)
+    conv_out = jax.nn.silu(conv_out)
+    xr, b_in, c_in = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, S, H)
+    a = -jnp.exp(params["ssm_a"])  # (H,)
+    xh = xr.astype(jnp.float32).reshape(bsz, s, h, p)
+    xh = constrain(xh, DP, None, TP, None)
+
+    if cache is not None and s == 1:
+        # O(1) decode: S = exp(dt a) S + dt B x^T ; y = C.S
+        da = jnp.exp(dt[:, 0, :] * a[None, :])  # (B, H)
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], b_in[:, 0].astype(jnp.float32), xh[:, 0])
+        state = da[..., None, None] * cache.state + dbx
+        y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32), state)[:, None]
+        y = y.reshape(bsz, 1, h, p)
+    else:
+        # prefill: a provided cache is assumed fresh (zero state) — the
+        # chunked scan starts from S_0 = 0 and the final state is returned.
+        y, state = _ssd_chunked(
+            xh, dt, a, b_in.astype(jnp.float32), c_in.astype(jnp.float32), cfg.ssm_chunk
+        )
+
+    y = y + params["ssm_d"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, DP, None, TP)
+    out = layers.dense(y, params["out_proj"], ctx, "mlp")
+    new_cache = SSDCache(new_conv, state) if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,57 @@
+"""Int8 error-feedback gradient compression.
+
+At 1000-node scale the cross-pod (DCN) gradient all-reduce is the
+bandwidth-critical collective; compressing the pod-boundary traffic 4×
+(f32→int8) with an error-feedback residual keeps convergence unbiased
+(the quantization error is replayed into the next step's gradient).
+
+``compress``/``decompress`` are pure and jit-safe.  In the train step the
+pair wraps the gradient *before* the optimizer; the residual rides in the
+train state.  On a real mesh the compressed codes are what crosses the
+"pod" axis (psum of int32-accumulated codes); on CPU the semantics are
+identical, so tests validate convergence + the residual invariant.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressState", "init_state", "compress_grads"]
+
+
+class CompressState(NamedTuple):
+    residual: Any  # pytree of f32, same structure as grads
+
+
+def init_state(params) -> CompressState:
+    return CompressState(
+        residual=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def _q(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    code = jnp.round(x / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return code, scale
+
+
+def compress_grads(grads, state: CompressState) -> tuple[Any, CompressState, dict]:
+    """Returns (decompressed grads as would arrive post-allreduce, new state,
+    metrics).  Error feedback: e' = (g + e) - dq(q(g + e))."""
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        code, scale = _q(x)
+        deq = code.astype(jnp.float32) * scale
+        return deq, x - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(state.residual)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    res = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    err = sum(jnp.sum(jnp.square(r)) for r in jax.tree_util.tree_leaves(res))
+    return deq, CompressState(res), {"compress_residual_sq": err}

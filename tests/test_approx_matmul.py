@@ -1,0 +1,99 @@
+"""Approximate-GEMM modes (core.approx_matmul) against exact references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import luts, quantization
+from repro.core.approx_matmul import approx_matmul, approx_matmul_int, error_moments
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+def test_bitexact_int_gemm_matches_lut_reduction():
+    n, t = 6, 3
+    rng = np.random.default_rng(0)
+    ma = rng.integers(0, 1 << n, size=(8, 16), dtype=np.uint32)
+    mb = rng.integers(0, 1 << n, size=(16, 12), dtype=np.uint32)
+    sa = rng.choice([-1, 1], size=(8, 16)).astype(np.int8)
+    sb = rng.choice([-1, 1], size=(16, 12)).astype(np.int8)
+    got = np.asarray(approx_matmul_int(ma, sa, mb, sb, n=n, t=t))
+    lut = luts.product_lut(n, t)
+    want = np.zeros((8, 12))
+    for i in range(8):
+        for j in range(12):
+            want[i, j] = sum(
+                float(lut[ma[i, k], mb[k, j]]) * sa[i, k] * sb[k, j] for k in range(16)
+            )
+    np.testing.assert_allclose(got, want)
+
+
+def test_mode_exact_is_matmul():
+    x, w = _rand((16, 32), 0), _rand((32, 8), 1)
+    np.testing.assert_allclose(
+        np.asarray(approx_matmul(x, w, mode="exact")), np.asarray(x @ w), rtol=1e-6
+    )
+
+
+def test_bitexact_mode_close_to_quantized_exact():
+    """bitexact == quantized exact GEMM + bounded approximate-product error."""
+    n, t = 8, 4
+    x, w = _rand((24, 64), 2), _rand((64, 16), 3)
+    got = np.asarray(approx_matmul(x, w, n=n, t=t, mode="bitexact"))
+    # reference: same quantization, exact products
+    qx = quantization.calibrate_absmax(x, bits=n)
+    qw = quantization.calibrate_absmax(w, bits=n)
+    mx, sx = quantization.quantize(x, qx)
+    mw, sw = quantization.quantize(w, qw)
+    ax = np.asarray(mx, np.float64) * np.asarray(sx, np.float64)
+    aw = np.asarray(mw, np.float64) * np.asarray(sw, np.float64)
+    exact_q = (ax @ aw) * float(qx.scale * qw.scale)
+    err_lut = luts.error_lut(n, t)
+    bound = np.abs(err_lut).max() * 64 * float(qx.scale * qw.scale)
+    assert np.abs(got - exact_q).max() <= bound
+    # and it should usually differ from the exact path (errors do occur)
+    assert np.abs(got - exact_q).max() > 0
+
+
+def test_lowrank_mode_tracks_bitexact():
+    n, t = 6, 3
+    x, w = _rand((32, 48), 4), _rand((48, 24), 5)
+    bitexact = np.asarray(approx_matmul(x, w, n=n, t=t, mode="bitexact"))
+    exact = np.asarray(approx_matmul(x, w, n=n, t=t, mode="exact"))
+    full = np.asarray(approx_matmul(x, w, n=n, t=t, mode="lowrank", rank=1 << n))
+    r8 = np.asarray(approx_matmul(x, w, n=n, t=t, mode="lowrank", rank=8))
+    # full-rank correction reproduces the bit-exact semantics
+    np.testing.assert_allclose(full, bitexact, rtol=1e-4, atol=1e-4)
+    # rank-8 must be closer to bitexact than the uncorrected exact GEMM
+    assert np.abs(r8 - bitexact).mean() < np.abs(exact - bitexact).mean()
+
+
+def test_inject_mode_moments():
+    n, t = 8, 4
+    mean, std = error_moments(n, t)
+    x, w = _rand((64, 128), 6), _rand((128, 32), 7)
+    outs = []
+    for s in range(8):
+        out = approx_matmul(x, w, n=n, t=t, mode="inject", key=jax.random.PRNGKey(s))
+        outs.append(np.asarray(out))
+    exact = np.asarray(x @ w)
+    spread = np.std(np.stack(outs), axis=0).mean()
+    assert spread > 0  # stochastic
+    # bias matches mean * K * scale within MC noise
+    qx = quantization.calibrate_absmax(x, bits=n)
+    qw = quantization.calibrate_absmax(w, bits=n)
+    scale = float(qx.scale * qw.scale)
+    expected_bias = mean * 128 * scale
+    got_bias = (np.mean(np.stack(outs)) - exact.mean())
+    assert got_bias == pytest.approx(expected_bias, abs=6 * std * np.sqrt(128.0) * scale / np.sqrt(64 * 32 * 8))
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        approx_matmul(_rand((4, 4)), _rand((4, 4)), mode="nope")
+    with pytest.raises(ValueError):
+        approx_matmul(_rand((4, 4)), _rand((4, 4)), mode="inject")  # needs key

@@ -1,0 +1,79 @@
+"""Error metrics (Section III-B) and the probabilistic estimator (V-B)."""
+
+import numpy as np
+import pytest
+
+from repro.core import error_metrics, error_model
+
+
+@pytest.mark.parametrize("n,t", [(4, 2), (6, 3), (8, 4), (8, 2)])
+def test_exhaustive_report_consistency(n, t):
+    rep = error_metrics.exhaustive_eval(n, t, fix_to_1=False)
+    assert rep.samples == 1 << (2 * n)
+    # Eq. 11 shows up as the most-negative ED (overshoot), exactly
+    assert -rep.max_ed_neg == error_model.mae_closed_form(n, t)
+    assert rep.mae >= rep.med_abs
+    assert 0.0 <= rep.er <= 1.0
+    assert rep.nmed == pytest.approx(rep.med_abs / (2**n - 1) ** 2)
+    # BER of the always-exact LSBs (bits below t+1) is 0 without fix-to-1
+    for i in range(min(t + 1, len(rep.ber))):
+        assert rep.ber[i] == 0.0
+
+
+@pytest.mark.parametrize("n,t", [(6, 3), (8, 4)])
+def test_fix_to_1_reduces_med_abs(n, t):
+    """The paper's motivation for the fix-to-1 multiplexers."""
+    r_off = error_metrics.exhaustive_eval(n, t, fix_to_1=False)
+    r_on = error_metrics.exhaustive_eval(n, t, fix_to_1=True)
+    assert r_on.med_abs < r_off.med_abs
+
+
+def test_mc_converges_to_exhaustive():
+    n, t = 8, 4
+    ex = error_metrics.exhaustive_eval(n, t)
+    mc = error_metrics.mc_eval(n, t, samples=1 << 18, seed=3)
+    assert mc.er == pytest.approx(ex.er, rel=0.05)
+    assert mc.med_abs == pytest.approx(ex.med_abs, rel=0.1)
+
+
+def test_mc_with_input_pdf():
+    n, t = 6, 3
+    pdf = np.zeros(1 << n)
+    pdf[: 1 << (t // 2)] = 1.0  # only tiny operands -> no carries -> no error
+    pdf /= pdf.sum()
+    rep = error_metrics.mc_eval(n, t, samples=1 << 14, pdf_a=pdf, pdf_b=pdf)
+    assert rep.er == 0.0 and rep.med_abs == 0.0
+
+
+@pytest.mark.parametrize("order", [0, 1])
+def test_estimator_tracks_exhaustive(order):
+    """The #P-sidestepping estimator: per-cycle carry-crossing and the
+    MAE-event probability must track ground truth within tolerance."""
+    n, t = 8, 4
+    est = error_model.estimate(n, t, order=order)
+    ex = error_metrics.exhaustive_eval(n, t, fix_to_1=True)
+    # ER upper estimate must be within [er_truth, 1] ballpark
+    assert 0 < est.er_msp <= 1.0
+    assert est.er_msp == pytest.approx(ex.er, rel=0.6)
+    # fix-to-1 firing probability ~ P(C last cycle); sanity window
+    assert 0.0 < est.p_fix < 0.5
+    assert 0.0 < est.p_ed_mae < est.p_fix + 0.05
+
+
+def test_estimator_order1_not_worse_than_order0():
+    n, t = 8, 4
+    ex = error_metrics.exhaustive_eval(n, t, fix_to_1=True)
+    e0 = error_model.estimate(n, t, order=0)
+    e1 = error_model.estimate(n, t, order=1)
+    err0 = abs(e0.er_msp - ex.er)
+    err1 = abs(e1.er_msp - ex.er)
+    assert err1 <= err0 * 1.2  # cofactors should not systematically hurt
+
+
+def test_estimator_biased_inputs():
+    """Per-bit marginals feed the estimator (paper: measured input PDFs)."""
+    n, t = 8, 4
+    low = error_model.estimate(n, t, pa=np.full(n, 0.05), pb=np.full(n, 0.05))
+    high = error_model.estimate(n, t, pa=np.full(n, 0.8), pb=np.full(n, 0.8))
+    assert low.er_msp < high.er_msp
+    assert low.med_abs_est < high.med_abs_est

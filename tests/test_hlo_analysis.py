@@ -1,0 +1,82 @@
+"""The loop-aware HLO analyzer must count scan-body work trip-count times
+(XLA's own cost_analysis counts it once — the bug this module exists for)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, type_bytes
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_type_bytes():
+    assert type_bytes("f32[16,64]{1,0}") == 16 * 64 * 4
+    assert type_bytes("bf16[2,3]") == 12
+    assert type_bytes("(f32[4], s8[8])") == 24
+    assert type_bytes("pred[]") == 1  # scalar: one element
+    assert type_bytes("f32[]") == 4
+
+
+def test_single_matmul_flops():
+    m, k, n = 64, 128, 32
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    comp = _compile(lambda x, y: x @ y, a, b)
+    ana = analyze_hlo(comp.as_text())
+    assert ana.flops == 2 * m * k * n
+
+
+def test_scan_multiplies_by_trip_count():
+    L, d = 7, 32
+    w = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, d), jnp.float32)
+
+    def fn(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    comp = _compile(fn, w, x)
+    ana = analyze_hlo(comp.as_text())
+    assert ana.flops == L * 2 * 4 * d * d
+    assert any(n == L for n in ana.trip_counts.values())
+    # XLA's own analysis undercounts (documents why analyze_hlo exists)
+    xla = comp.cost_analysis()
+    assert float(xla.get("flops", 0)) < ana.flops
+
+
+def test_grad_scan_flops():
+    L, d = 5, 16
+    w = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((2, d), jnp.float32)
+
+    def fn(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    comp = _compile(jax.grad(fn), w, x)
+    ana = analyze_hlo(comp.as_text())
+    # fwd (1 dot) + bwd (2 dots) per layer
+    assert ana.flops == pytest.approx(3 * L * 2 * 2 * d * d, rel=0.01)
+
+
+def test_bytes_scale_with_trip_count():
+    d = 64
+
+    def fn(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    sizes = {}
+    for L in (2, 8):
+        comp = _compile(fn, jax.ShapeDtypeStruct((L, d, d), jnp.float32),
+                        jax.ShapeDtypeStruct((4, d), jnp.float32))
+        sizes[L] = analyze_hlo(comp.as_text()).bytes
+    # 4x the layers -> ~4x the traffic (stacked weights are read per-layer)
+    assert 3.0 < sizes[8] / sizes[2] < 5.0

@@ -1,0 +1,86 @@
+"""Pallas kernels vs. pure-jnp oracles (interpret=True on CPU), with
+shape / bit-width / splitting-point sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization
+from repro.kernels import ops, ref
+from repro.kernels.lowrank_matmul import lowrank_matmul_pallas
+from repro.kernels.lut_matmul import lut_matmul_pallas
+from repro.kernels.seqmul_kernel import seqmul_pallas
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (16, 256), (128, 128), (3, 100)])
+@pytest.mark.parametrize("n,t", [(8, 4), (8, 2), (6, 3), (4, 1), (15, 7)])
+def test_seqmul_kernel_sweep(shape, n, t):
+    rng = np.random.default_rng(n * 100 + t)
+    a = jnp.asarray(rng.integers(0, 1 << n, size=shape), jnp.uint32)
+    b = jnp.asarray(rng.integers(0, 1 << n, size=shape), jnp.uint32)
+    for approx in (True, False):
+        got = seqmul_pallas(a, b, n=n, t=t, approx=approx, interpret=True)
+        want = ref.seqmul_ref(a, b, n=n, t=t, approx=approx)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fix", [True, False])
+def test_seqmul_kernel_fix_to_1(fix):
+    n, t = 8, 4
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.integers(0, 1 << n, size=(64, 64)), jnp.uint32)
+    b = jnp.asarray(rng.integers(0, 1 << n, size=(64, 64)), jnp.uint32)
+    got = seqmul_pallas(a, b, n=n, t=t, approx=True, fix_to_1=fix, interpret=True)
+    want = ref.seqmul_ref(a, b, n=n, t=t, approx=True, fix_to_1=fix)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k,nn", [(16, 32, 16), (64, 64, 64), (128, 96, 32)])
+@pytest.mark.parametrize("n,t", [(8, 4), (6, 2)])
+def test_lut_matmul_kernel_sweep(m, k, nn, n, t):
+    rng = np.random.default_rng(m + k + n)
+    ma = jnp.asarray(rng.integers(0, 1 << n, size=(m, k)), jnp.uint32)
+    mb = jnp.asarray(rng.integers(0, 1 << n, size=(k, nn)), jnp.uint32)
+    sa = jnp.asarray(rng.choice([-1.0, 1.0], size=(m, k)), jnp.float32)
+    sb = jnp.asarray(rng.choice([-1.0, 1.0], size=(k, nn)), jnp.float32)
+    lut = ops._lut_dev(n, t, True)
+    got = lut_matmul_pallas(lut, ma, sa, mb, sb, n=n, interpret=True)
+    want = ref.lut_matmul_ref(ma, sa.astype(jnp.int8), mb, sb.astype(jnp.int8), n=n, t=t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,nn,r", [(16, 32, 16, 4), (64, 48, 32, 8)])
+def test_lowrank_matmul_kernel_sweep(m, k, nn, r):
+    rng = np.random.default_rng(m * r)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, nn)), jnp.float32)
+    ue = jnp.asarray(rng.standard_normal((m, k, r)), jnp.float32)
+    ve = jnp.asarray(rng.standard_normal((k, nn, r)), jnp.float32)
+    got = lowrank_matmul_pallas(a, b, ue, ve, rank=r, interpret=True)
+    want = ref.lowrank_matmul_ref(a, b, ue, ve)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_ops_approx_multiply():
+    n, t = 8, 4
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.integers(0, 1 << n, size=(32, 128)), jnp.uint32)
+    b = jnp.asarray(rng.integers(0, 1 << n, size=(32, 128)), jnp.uint32)
+    got = ops.approx_multiply(a, b, n=n, t=t)
+    want = ref.seqmul_ref(a, b, n=n, t=t)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode", ["bitexact", "lowrank"])
+def test_ops_matmul_kernel_vs_core(mode):
+    """The kernel-backed public GEMM must match core.approx_matmul."""
+    from repro.core.approx_matmul import approx_matmul
+
+    n, t = 8, 4
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    got = ops.approx_matmul_kernel(x, w, n=n, t=t, mode=mode, rank=8)
+    want = approx_matmul(x, w, n=n, t=t, mode=mode, rank=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,81 @@
+"""Product/error LUTs, SVD factors, quantization round-trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import luts, quantization, seqmul
+
+
+def test_product_lut_matches_simulator():
+    n, t = 6, 3
+    lut = luts.product_lut(n, t)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << n, size=200, dtype=np.uint32)
+    b = rng.integers(0, 1 << n, size=200, dtype=np.uint32)
+    w = seqmul.seq_mul_words(a, b, n=n, t=t, approx=True, fix_to_1=True)
+    expect = seqmul.assemble_product_u64(w, n=n, t=t)
+    np.testing.assert_array_equal(lut[a, b], expect.astype(np.int32))
+
+
+def test_error_lut_is_difference():
+    n, t = 5, 2
+    v = np.arange(1 << n)
+    exact = np.multiply.outer(v, v)
+    np.testing.assert_array_equal(
+        luts.error_lut(n, t) + exact, luts.product_lut(n, t)
+    )
+
+
+def test_svd_factors_reconstruct():
+    n, t = 6, 3
+    e = luts.error_lut(n, t).astype(np.float64)
+    u, v, energy = luts.svd_error_factors(n, t, rank=1 << n)  # full rank
+    assert energy == pytest.approx(1.0)
+    np.testing.assert_allclose(u @ v.T, e, atol=1e-3)
+    # truncation keeps the reported energy fraction
+    u8, v8, en8 = luts.svd_error_factors(n, t, rank=8)
+    approx = u8 @ v8.T
+    resid = np.linalg.norm(e - approx) ** 2 / max(np.linalg.norm(e) ** 2, 1e-9)
+    assert resid == pytest.approx(1 - en8, abs=1e-6)
+    assert 0.5 < en8 <= 1.0  # rank-8 captures most error energy at n=6
+
+
+def test_lut_stats_and_cap():
+    s = luts.lut_stats(8, 4)
+    assert s["vmem_bytes_product_lut"] == 4 * (1 << 16)
+    assert 0 < s["nonzero_frac"] < 1
+    with pytest.raises(ValueError):
+        luts.product_lut(12, 4)
+
+
+def test_quantize_roundtrip():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    qp = quantization.calibrate_absmax(x, bits=8)
+    mag, sign = quantization.quantize(x, qp)
+    assert mag.dtype == jnp.uint32
+    assert int(mag.max()) <= 255
+    back = quantization.dequantize(mag, sign, qp)
+    err = np.abs(np.asarray(back - x))
+    assert err.max() <= float(qp.scale) * 0.5 + 1e-6
+
+
+def test_fake_quant_ste_gradient():
+    x = jnp.linspace(-1.0, 1.0, 16)
+    g = jax.grad(lambda v: quantization.fake_quant(v, bits=4).sum())(x)
+    # straight-through on interior elements (the abs-max endpoints also
+    # receive the d(scale)/dx term, by design)
+    np.testing.assert_allclose(np.asarray(g)[1:-1], 1.0)
+
+
+def test_per_axis_calibration():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, 128)) * np.array([[1], [10], [100], [1000]]),
+                    jnp.float32)
+    qp = quantization.calibrate_absmax(x, bits=8, axis=1)
+    assert qp.scale.shape == (4, 1)
+    xq = quantization.fake_quant(x, bits=8, axis=1)
+    rel = np.abs(np.asarray(xq - x)) / np.maximum(np.abs(np.asarray(x)), 1e-3)
+    assert np.median(rel) < 0.05

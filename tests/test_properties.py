@@ -1,0 +1,77 @@
+"""Hypothesis property tests on the multiplier's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import boolean_ref, error_model, seqmul
+
+_nt = st.integers(2, 12).flatmap(
+    lambda n: st.tuples(st.just(n), st.integers(1, n - 1))
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_nt, st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_exact_always_correct(nt, a, b):
+    n, t = nt
+    a, b = a % (1 << n), b % (1 << n)
+    w = seqmul.seq_mul_words(np.uint32(a), np.uint32(b), n=n, t=t, approx=False)
+    assert int(seqmul.assemble_product_u64(w, n=n, t=t)) == a * b
+
+
+@settings(max_examples=60, deadline=None)
+@given(_nt, st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1),
+       st.booleans())
+def test_ed_bounds(nt, a, b, fix):
+    """|ED| never exceeds the closed-form worst cases of either sign."""
+    n, t = nt
+    a, b = a % (1 << n), b % (1 << n)
+    w = seqmul.seq_mul_words(np.uint32(a), np.uint32(b), n=n, t=t,
+                             approx=True, fix_to_1=fix)
+    ed = a * b - int(seqmul.assemble_product_u64(w, n=n, t=t))
+    assert ed <= error_model.max_ed_dropped_carry(n, t)
+    assert -ed <= error_model.mae_closed_form(n, t) + (
+        # fix-to-1 may overshoot up to the fixed pattern value
+        (1 << (n + t)) if fix else 0
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(_nt, st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_matches_boolean_reference(nt, a, b):
+    n, t = nt
+    a, b = a % (1 << n), b % (1 << n)
+    w = seqmul.seq_mul_words(np.uint32(a), np.uint32(b), n=n, t=t, approx=True)
+    got = int(seqmul.assemble_product_u64(w, n=n, t=t))
+    ref = int(boolean_ref.int_from_bits(boolean_ref.mul_approx_bits(
+        boolean_ref.bits_from_int(np.uint64(a), n)[None],
+        boolean_ref.bits_from_int(np.uint64(b), n)[None], t=t))[0])
+    assert got == ref
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_zero_and_identity(n, a, b):
+    """x*0 == 0 and small operands are exact for every splitting point."""
+    a = a % (1 << n)
+    for t in range(1, n):
+        w = seqmul.seq_mul_words(np.uint32(a), np.uint32(0), n=n, t=t, approx=True)
+        assert int(seqmul.assemble_product_u64(w, n=n, t=t)) == 0
+        w = seqmul.seq_mul_words(np.uint32(1), np.uint32(a), n=n, t=t, approx=True)
+        got = int(seqmul.assemble_product_u64(w, n=n, t=t))
+        # multiplying by 1 generates no carries anywhere -> exact
+        assert got == a
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(3, 8))
+def test_med_monotone_in_t(n):
+    """Mean |ED| grows with the splitting point t (exhaustive): deferred
+    carries carry weight 2^t, which dominates their decreasing frequency.
+    (Accuracy favors small t; t=n/2 is the *latency* optimum — the paper's
+    accuracy-configurability axis.)"""
+    from repro.core import error_metrics
+
+    meds = [error_metrics.exhaustive_eval(n, t, fix_to_1=False).med_abs
+            for t in range(1, n)]
+    assert all(meds[i + 1] >= meds[i] for i in range(len(meds) - 1)), (n, meds)

@@ -1,0 +1,129 @@
+"""Core multiplier: word-packed implementation vs. the paper's literal
+boolean recurrences, exactness, closed-form MAE (Eq. 11)."""
+
+import numpy as np
+import pytest
+
+from repro.core import boolean_ref, error_model, seqmul
+
+
+def _all_pairs(n):
+    v = np.arange(1 << n, dtype=np.uint64)
+    return np.repeat(v, 1 << n), np.tile(v, 1 << n)
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 6])
+def test_exact_matches_product_exhaustive(n):
+    a, b = _all_pairs(n)
+    w = seqmul.seq_mul_words(a.astype(np.uint32), b.astype(np.uint32),
+                             n=n, t=max(1, n // 2), approx=False)
+    got = seqmul.assemble_product_u64(w, n=n, t=max(1, n // 2))
+    np.testing.assert_array_equal(got, a * b)
+
+
+@pytest.mark.parametrize("n", [4, 6, 8])
+@pytest.mark.parametrize("fix", [True, False])
+def test_approx_matches_boolean_reference_exhaustive(n, fix):
+    a, b = _all_pairs(n)
+    for t in range(1, n):
+        w = seqmul.seq_mul_words(a.astype(np.uint32), b.astype(np.uint32),
+                                 n=n, t=t, approx=True, fix_to_1=fix)
+        got = seqmul.assemble_product_u64(w, n=n, t=t)
+        ref_bits = boolean_ref.mul_approx_bits(
+            boolean_ref.bits_from_int(a, n), boolean_ref.bits_from_int(b, n),
+            t=t, fix_to_1=fix)
+        ref = boolean_ref.int_from_bits(ref_bits)
+        np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("n", [12, 16, 24, 31, 32])
+def test_large_n_random_vs_boolean_reference(n):
+    rng = np.random.default_rng(n)
+    a = rng.integers(0, 1 << n, size=512, dtype=np.uint64)
+    b = rng.integers(0, 1 << n, size=512, dtype=np.uint64)
+    t = n // 2
+    for fix in (True, False):
+        w = seqmul.seq_mul_words(a.astype(np.uint32), b.astype(np.uint32),
+                                 n=n, t=t, approx=True, fix_to_1=fix)
+        got = seqmul.assemble_product_u64(w, n=n, t=t)
+        ref = boolean_ref.int_from_bits(boolean_ref.mul_approx_bits(
+            boolean_ref.bits_from_int(a, n), boolean_ref.bits_from_int(b, n),
+            t=t, fix_to_1=fix))
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_exact_boolean_reference_itself():
+    n = 5
+    a, b = _all_pairs(n)
+    bits = boolean_ref.mul_exact_bits(
+        boolean_ref.bits_from_int(a, n), boolean_ref.bits_from_int(b, n))
+    np.testing.assert_array_equal(boolean_ref.int_from_bits(bits), a * b)
+
+
+@pytest.mark.parametrize("n,t", [(4, 2), (6, 2), (6, 3), (8, 4), (8, 2)])
+def test_mae_closed_form_eq11(n, t):
+    """Eq. (11): max |ED| == 2^{n+t-1} - 2^{t+1} (fix-to-1 disabled;
+    see error_model docstring for the sign-structure note)."""
+    a, b = _all_pairs(n)
+    w = seqmul.seq_mul_words(a.astype(np.uint32), b.astype(np.uint32),
+                             n=n, t=t, approx=True, fix_to_1=False)
+    approx = seqmul.assemble_product_u64(w, n=n, t=t).astype(np.int64)
+    ed = (a * b).astype(np.int64) - approx
+    # negative side (deferred carries overshoot): exactly Eq. 11
+    assert -int(ed.min()) == error_model.mae_closed_form(n, t)
+    # positive side (final carry dropped): bounded by 2^{n+t-1}
+    assert int(ed.max()) <= error_model.max_ed_dropped_carry(n, t)
+
+
+@pytest.mark.parametrize("n,t", [(4, 2), (6, 3), (8, 4)])
+def test_fix_to_1_reduces_worst_case(n, t):
+    a, b = _all_pairs(n)
+    eds = {}
+    for fix in (False, True):
+        w = seqmul.seq_mul_words(a.astype(np.uint32), b.astype(np.uint32),
+                                 n=n, t=t, approx=True, fix_to_1=fix)
+        approx = seqmul.assemble_product_u64(w, n=n, t=t).astype(np.int64)
+        eds[fix] = (a * b).astype(np.int64) - approx
+    # fix-to-1 strictly shrinks the positive worst case ...
+    assert eds[True].max() < eds[False].max()
+    # ... and only changes results where it fires (c_last == 1)
+    w = seqmul.seq_mul_words(a.astype(np.uint32), b.astype(np.uint32),
+                             n=n, t=t, approx=True, fix_to_1=False)
+    fired = np.asarray(w.c_last).astype(bool)
+    np.testing.assert_array_equal(eds[True][~fired], eds[False][~fired])
+
+
+def test_approx_errors_only_when_carry_crosses():
+    """Products whose exact computation never generates a carry at the
+    split are bit-exact under the approximate multiplier."""
+    n, t = 8, 4
+    a, b = _all_pairs(n)
+    w = seqmul.seq_mul_words(a.astype(np.uint32), b.astype(np.uint32),
+                             n=n, t=t, approx=True, fix_to_1=True)
+    approx = seqmul.assemble_product_u64(w, n=n, t=t)
+    exact = a * b
+    # small operands never produce carries across bit t-1
+    small = (a < (1 << (t // 2))) & (b < (1 << (t // 2)))
+    np.testing.assert_array_equal(approx[small], exact[small])
+
+
+def test_validation_errors():
+    a = np.zeros(4, np.uint32)
+    with pytest.raises(ValueError):
+        seqmul.seq_mul_words(a, a, n=0, t=1, approx=True)
+    with pytest.raises(ValueError):
+        seqmul.seq_mul_words(a, a, n=8, t=8, approx=True)
+    with pytest.raises(ValueError):
+        seqmul.seq_mul_words(a, a, n=33, t=4, approx=True)
+
+
+def test_packed_u32_helpers():
+    n, t = 8, 4
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << n, size=256, dtype=np.uint32)
+    b = rng.integers(0, 1 << n, size=256, dtype=np.uint32)
+    exact = seqmul.seq_mul_exact_u32(a, b, n=n)
+    np.testing.assert_array_equal(np.asarray(exact), a * b)
+    approx = np.asarray(seqmul.seq_mul_approx_u32(a, b, n=n, t=t))
+    w = seqmul.seq_mul_words(a, b, n=n, t=t, approx=True, fix_to_1=True)
+    np.testing.assert_array_equal(approx, seqmul.assemble_product_u64(w, n=n, t=t))

@@ -1,0 +1,91 @@
+"""End-to-end: loss decreases on structured data; approximate-multiplier
+training runs; encoder-decoder trains; grad-accum equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import apply_approx, get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.registry import build_model
+from repro.train.steps import init_train_state, make_train_step
+
+
+def _train(cfg, steps=60, batch=8, seq=64, tcfg=None, seed=0):
+    m = build_model(cfg)
+    tcfg = tcfg or TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=steps)
+    state = init_train_state(m, tcfg, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(m, tcfg))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=batch, seed=seed))
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        if cfg.is_encdec:
+            b["src_embeds"] = jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(7), i),
+                (batch, seq, cfg.d_model), jnp.float32)
+        state, metrics = step(state, b)
+        losses.append(float(metrics["loss"]))
+    return losses
+
+
+def test_loss_decreases_dense():
+    cfg = get_config("qwen3-0.6b").reduced(vocab_size=128)
+    losses = _train(cfg)
+    assert np.mean(losses[-10:]) < np.mean(losses[:5]) - 0.2
+
+
+def test_loss_decreases_with_paper_technique():
+    """Training *through* the approximate multiplier (inject mode) must
+    still converge — the claim that lets the technique deploy at scale."""
+    cfg = apply_approx(get_config("qwen3-0.6b").reduced(vocab_size=128),
+                       mode="inject", n=8, t=4)
+    losses = _train(cfg)
+    assert np.mean(losses[-10:]) < np.mean(losses[:5]) - 0.2
+
+
+def test_loss_decreases_encdec():
+    cfg = get_config("seamless-m4t-large-v2").reduced(vocab_size=128)
+    losses = _train(cfg, steps=40)
+    assert np.mean(losses[-8:]) < np.mean(losses[:5]) - 0.1
+
+
+def test_grad_accum_matches_single_batch():
+    """grad_accum=4 over the same data must match accum=1 closely."""
+    cfg = get_config("qwen3-0.6b").reduced(vocab_size=64, num_layers=2)
+    m = build_model(cfg)
+    data = SyntheticLM(DataConfig(vocab_size=64, seq_len=32, global_batch=8))
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+
+    outs = {}
+    for accum in (1, 4):
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=0, total_steps=4,
+                           grad_accum=accum)
+        state = init_train_state(m, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(m, tcfg))
+        new_state, metrics = step(state, batch)
+        outs[accum] = (
+            np.asarray(jax.tree_util.tree_leaves(new_state.params)[0], np.float32),
+            float(metrics["loss"]),
+        )
+    # losses may be averaged differently across microbatches; params must agree
+    np.testing.assert_allclose(outs[1][0], outs[4][0], rtol=2e-2, atol=2e-4)
+    assert outs[1][1] == pytest.approx(outs[4][1], rel=1e-2)
+
+
+def test_rng_per_step_differs():
+    """Error-injection noise must differ across steps (rng folding)."""
+    cfg = apply_approx(get_config("qwen3-0.6b").reduced(vocab_size=64, num_layers=2),
+                       mode="inject")
+    m = build_model(cfg)
+    tcfg = TrainConfig(total_steps=4)
+    state = init_train_state(m, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(m, tcfg))
+    data = SyntheticLM(DataConfig(vocab_size=64, seq_len=16, global_batch=2))
+    b = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    s1, m1 = step(state, b)
+    s2, m2 = step(s1, b)  # same batch, different step -> different noise
+    assert float(m1["loss"]) != float(m2["loss"])
