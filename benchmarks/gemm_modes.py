@@ -2,12 +2,10 @@
 accuracy vs. the exact GEMM — the framework-level counterpart of the
 paper's accuracy-configurability table.
 
-Modes (core.approx_matmul / kernels.ops):
-  exact     plain f32 matmul (baseline the paper compares against)
-  bitexact  faithful paper semantics via the product LUT
-  kernel    the Pallas LUT kernel (interpret mode on CPU)
-  lowrank   exact GEMM + rank-r SVD error correction (MXU-friendly)
-  inject    moment-matched stochastic error injection (O(1) at scale)
+The run matrix comes straight from the engine's mode registry
+(``repro.engine.list_modes()``), on the reference backend plus the Pallas
+backend for every mode that registers a kernel body — so a newly
+registered mode or backend shows up here with no benchmark changes.
 """
 
 from __future__ import annotations
@@ -18,8 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.approx_matmul import approx_matmul
-from repro.kernels.ops import approx_matmul_kernel
+from repro import engine
 
 M, K, N = 128, 256, 128
 N_BITS, T_SPLIT = 8, 4
@@ -36,6 +33,19 @@ def _timed(fn, *args, **kw):
     return np.asarray(out), (time.perf_counter() - t0) / REPEAT * 1e6
 
 
+def _runs(x, w):
+    """(label, thunk) per registered mode × available backend."""
+    key = jax.random.PRNGKey(0)
+    for mode in engine.list_modes():
+        spec = engine.get_mode(mode)
+        kw = dict(n=N_BITS, t=T_SPLIT, mode=mode, rank=8)
+        if spec.needs_key:
+            kw["key"] = key
+        yield mode, jax.jit(lambda kw=kw: engine.matmul(x, w, backend="reference", **kw))
+        if spec.pallas is not None:
+            yield f"{mode}_pallas", (lambda kw=kw: engine.matmul(x, w, backend="pallas", **kw))
+
+
 def rows():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
@@ -44,15 +54,7 @@ def rows():
     bitexact = None
     out = []
 
-    runs = [
-        ("exact", jax.jit(lambda: approx_matmul(x, w, mode="exact"))),
-        ("bitexact", jax.jit(lambda: approx_matmul(x, w, n=N_BITS, t=T_SPLIT, mode="bitexact"))),
-        ("kernel_lut", lambda: approx_matmul_kernel(x, w, n=N_BITS, t=T_SPLIT, mode="bitexact")),
-        ("lowrank_r8", jax.jit(lambda: approx_matmul(x, w, n=N_BITS, t=T_SPLIT, mode="lowrank", rank=8))),
-        ("inject", jax.jit(lambda: approx_matmul(x, w, n=N_BITS, t=T_SPLIT, mode="inject",
-                                                 key=jax.random.PRNGKey(0)))),
-    ]
-    for name, fn in runs:
+    for name, fn in _runs(x, w):
         got, us = _timed(fn)
         if name == "bitexact":
             bitexact = got

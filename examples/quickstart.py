@@ -7,9 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.core import error_metrics, error_model, seqmul
-from repro.core.approx_matmul import approx_matmul
-from repro.kernels.ops import approx_multiply
 
 N, T = 8, 4  # 8-bit operands, carry chain split after bit 4
 
@@ -34,17 +33,20 @@ for t in (2, 4, 6):
           f"(latency ~ max(t, n-t) = {max(t, N - t)} FA delays)")
 
 # ---- 4. the multiplier as a GEMM inside a JAX model ------------------------
+# repro.engine is the one dispatch layer: pick a mode from the registry,
+# and the backend (reference jnp / Pallas kernels) is auto-selected.
+print(f"engine modes: {engine.list_modes()}  backends: {list(engine.BACKENDS)}")
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
 w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
 y_exact = x @ w
-y_approx = approx_matmul(x, w, n=N, t=T, mode="bitexact")
+y_approx = engine.matmul(x, w, n=N, t=T, mode="bitexact")
 rel = float(jnp.abs(y_approx - y_exact).mean() / jnp.abs(y_exact).mean())
 print(f"approximate GEMM rel. error vs exact: {rel:.3%}")
 
 # ---- 5. the Pallas kernel path (interpret mode on CPU) ---------------------
 am = jnp.asarray(rng.integers(0, 1 << N, (8, 128)), jnp.uint32)
 bm = jnp.asarray(rng.integers(0, 1 << N, (8, 128)), jnp.uint32)
-prod = approx_multiply(am, bm, n=N, t=T)
+prod = engine.multiply(am, bm, n=N, t=T, backend="pallas")
 print(f"Pallas elementwise approximate products: shape={prod.shape}, "
       f"dtype={prod.dtype}, finite={bool(jnp.isfinite(prod.astype(jnp.float32)).all())}")

@@ -18,6 +18,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import TrainConfig
 from repro.configs.registry import apply_approx, get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.engine import modes as engine_modes
 from repro.models.registry import build_model
 from repro.runtime.fault import run_loop
 from repro.train.steps import init_train_state, make_train_step
@@ -44,8 +45,7 @@ def main():
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--full", action="store_true", help="full (non-reduced) config")
-    ap.add_argument("--mode", default="inject",
-                    choices=["inject", "fakequant", "lowrank", "bitexact"])
+    ap.add_argument("--mode", default="inject", choices=engine_modes.list_modes())
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 

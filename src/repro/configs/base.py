@@ -4,7 +4,8 @@ Every assigned architecture is a ``ModelConfig`` instance in its own file
 under ``repro/configs``; reduced smoke variants derive from the full ones
 via ``reduced()``.  The paper's technique enters through ``ApproxConfig``:
 any dense projection can route its GEMM through the segmented-carry-chain
-approximate multiplier (see core.approx_matmul for the execution modes).
+approximate multiplier (see repro.engine for the mode registry and
+backend dispatch).
 """
 
 from __future__ import annotations
@@ -23,9 +24,10 @@ class ApproxConfig:
     n: int = 8  # operand magnitude bit-width
     t: int = 4  # carry-chain splitting point
     fix_to_1: bool = True
-    # 'fakequant' | 'inject' | 'lowrank' | 'bitexact'
-    # fakequant/inject scale to 1000-node training (O(1) overhead);
-    # lowrank/bitexact are the faithful inference paths.
+    # any name registered in repro.engine.modes ('exact' | 'bitexact' |
+    # 'lowrank' | 'inject' | 'fakequant' built in): fakequant/inject scale
+    # to 1000-node training (O(1) overhead); lowrank/bitexact are the
+    # faithful inference paths.
     mode: str = "inject"
     rank: int = 8
     # which projections are approximated ('mlp', 'attn', 'moe')

@@ -56,7 +56,14 @@ def apply_approx(
     rank: int = 8,
     targets: tuple = ("mlp",),
 ) -> ModelConfig:
-    """Deploy the segmented-carry-chain approximate multiplier on ``cfg``."""
+    """Deploy the segmented-carry-chain approximate multiplier on ``cfg``.
+
+    ``mode`` is validated against the engine's mode registry so a typo
+    fails here (listing the valid names) rather than at trace time.
+    """
+    from repro.engine import modes as engine_modes  # lazy: configs stay leaf-light
+
+    engine_modes.get_mode(mode)
     return dataclasses.replace(
         cfg,
         approx=ApproxConfig(

@@ -1,98 +1,31 @@
-"""Approximate GEMM built on the segmented-carry-chain multiplier.
+"""Compatibility shim over ``repro.engine`` (the old reference GEMM API).
 
-Reference (pure-jnp) implementations of every approximate-matmul mode the
-framework exposes.  The Pallas kernels in ``repro.kernels`` are tiled,
-VMEM-resident versions of these; tests assert allclose between the two.
-
-Modes
------
-``exact``     plain matmul (the baseline the paper compares against).
-``bitexact``  every scalar product is the paper's approximate multiplier,
-              via the (2^n, 2^n) product LUT (n <= 8): the faithful
-              semantics, gather-bound on TPU (VPU).
-``lowrank``   exact matmul + rank-r SVD correction of the error table:
-              C = A·B + Σ_k s E[|a|,|b|] ≈ A·B + einsum(sU[|a|], sV[|b|]) —
-              both terms run on the MXU.  Beyond-paper optimization.
-``inject``    exact matmul + moment-matched Gaussian error injection
-              (mean/var calibrated from the error table, scaled by √K):
-              O(1) overhead surrogate for 1000-node approximate-aware
-              training.
-
-All real-valued entry points quantize sign-magnitude via
-``core.quantization`` and dequantize with the product of scales.
+The reference-mode implementations, the artifact caches and the mode
+dispatch that used to live here moved to ``repro.engine`` (modes /
+artifacts / dispatch) — one registry, one cache, one recurrence for the
+whole stack.  ``approx_matmul`` pins ``backend="reference"`` so existing
+callers and tests keep the pure-jnp semantics; new code should call
+``repro.engine.matmul``, which also auto-selects the Pallas backend.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import luts, quantization
+from repro.engine import artifacts as _artifacts, dispatch as _dispatch, modes as _modes
 
-Mode = Literal["exact", "bitexact", "lowrank", "inject"]
+Mode = Literal["exact", "bitexact", "lowrank", "inject", "fakequant"]
 
 __all__ = ["approx_matmul_int", "approx_matmul", "Mode", "error_moments"]
 
 
-# NB: these caches must hold *concrete* arrays even when first populated
-# inside a jit/scan trace (ApproxDense in a scanned layer group), hence
-# ensure_compile_time_eval around the device conversion.
-
-
-@functools.lru_cache(maxsize=16)
-def _lut_dev(n: int, t: int, fix_to_1: bool):
-    with jax.ensure_compile_time_eval():
-        return jnp.asarray(luts.product_lut(n, t, fix_to_1=fix_to_1))
-
-
-@functools.lru_cache(maxsize=16)
-def _err_dev(n: int, t: int, fix_to_1: bool):
-    with jax.ensure_compile_time_eval():
-        return jnp.asarray(luts.error_lut(n, t, fix_to_1=fix_to_1))
-
-
-@functools.lru_cache(maxsize=16)
-def _svd_dev(n: int, t: int, rank: int, fix_to_1: bool):
-    u, v, energy = luts.svd_error_factors(n, t, rank, fix_to_1=fix_to_1)
-    with jax.ensure_compile_time_eval():
-        return jnp.asarray(u), jnp.asarray(v), energy
-
-
-@functools.lru_cache(maxsize=32)
 def error_moments(
     n: int, t: int, fix_to_1: bool = True, dist: str = "gaussian"
 ) -> tuple[float, float]:
-    """(mean, std) of the signed error table under an operand distribution.
-
-    ``dist="uniform"`` is the paper's Fig. 2 setting.  ``dist="gaussian"``
-    weights the table by the magnitude PDF of absmax-quantized Gaussian
-    activations (|x| ~ folded normal, absmax ≈ 4σ): real activations
-    concentrate at small magnitudes where carries rarely cross the split,
-    so uniform moments overestimate the injected error by ~an order of
-    magnitude (measured in benchmarks/gemm_modes.py).
-    """
-    e = luts.error_lut(n, t, fix_to_1=fix_to_1).astype(np.float64)
-    if dist == "uniform":
-        mean, var = float(e.mean()), float(e.var())
-    elif dist == "gaussian":
-        mags = np.arange(1 << n, dtype=np.float64)
-        sigma = (2**n - 1) / 4.0  # absmax calibration: max |x| ~ 4 sigma
-        p = np.exp(-0.5 * (mags / sigma) ** 2)
-        p /= p.sum()
-        w = np.outer(p, p)
-        mean = float((w * e).sum())
-        var = float((w * e * e).sum()) - mean * mean
-    else:
-        raise ValueError(f"dist must be 'uniform' or 'gaussian', got {dist!r}")
-    # signed sign-magnitude operands: the error rides sign_a*sign_b, whose
-    # expectation is 0 for symmetric activations/weights — the *signed*
-    # per-product error has zero mean and second moment mean^2 + var
-    # (validated empirically in benchmarks/gemm_modes.py).
-    return 0.0, float(np.sqrt(max(var + mean * mean, 0.0)))
+    """(mean, std) of the signed error table — see ``engine.artifacts``."""
+    return _artifacts.error_moments(n, t, fix_to_1, dist)
 
 
 def approx_matmul_int(
@@ -105,27 +38,10 @@ def approx_matmul_int(
     t: int,
     fix_to_1: bool = True,
 ) -> jax.Array:
-    """Bit-exact signed approximate GEMM on integer sign-magnitude operands.
-
-    mag_a (M, K) uint32, mag_b (K, N) uint32, signs int8.  Returns f32
-    (M, N) — accumulations are float32, exact for n <= 8 and K <= 2^8
-    (|sum| < 2^24); asserted in tests.
-    """
-    lut = _lut_dev(n, t, fix_to_1)
-    idx = mag_a[:, :, None] * jnp.uint32(1 << n) + mag_b[None, :, :]
-    prod = jnp.take(lut.reshape(-1), idx.astype(jnp.int32), axis=0)  # (M, K, N)
-    signed = prod.astype(jnp.float32) * (
-        sign_a.astype(jnp.float32)[:, :, None] * sign_b.astype(jnp.float32)[None, :, :]
+    """Bit-exact signed approximate GEMM on integer sign-magnitude operands."""
+    return _modes.bitexact_gemm_int(
+        mag_a, sign_a, mag_b, sign_b, n=n, t=t, fix_to_1=fix_to_1
     )
-    return signed.sum(axis=1)
-
-
-def _quantize_operands(x, w, n):
-    qx = quantization.calibrate_absmax(jax.lax.stop_gradient(x), bits=n)
-    qw = quantization.calibrate_absmax(jax.lax.stop_gradient(w), bits=n)
-    mx, sx = quantization.quantize(x, qx)
-    mw, sw = quantization.quantize(w, qw)
-    return (mx, sx, qx), (mw, sw, qw)
 
 
 def approx_matmul(
@@ -140,36 +56,7 @@ def approx_matmul(
     key: jax.Array | None = None,
 ) -> jax.Array:
     """Real-valued approximate GEMM: x (M, K) @ w (K, N) -> (M, N) f32."""
-    x = jnp.asarray(x, jnp.float32)
-    w = jnp.asarray(w, jnp.float32)
-    if mode == "exact":
-        return x @ w
-
-    (mx, sx, qx), (mw, sw, qw) = _quantize_operands(x, w, n)
-    scale = qx.scale * qw.scale
-    ax = mx.astype(jnp.float32) * sx.astype(jnp.float32)  # quantized ints, signed
-    aw = mw.astype(jnp.float32) * sw.astype(jnp.float32)
-
-    if mode == "bitexact":
-        acc = approx_matmul_int(mx, sx, mw, sw, n=n, t=t, fix_to_1=fix_to_1)
-        return acc * scale
-
-    exact_int = ax @ aw
-    if mode == "lowrank":
-        u, v, _ = _svd_dev(n, t, rank, fix_to_1)
-        ue = u[mx.astype(jnp.int32)] * sx.astype(jnp.float32)[..., None]  # (M, K, r)
-        ve = v[mw.astype(jnp.int32)] * sw.astype(jnp.float32)[..., None]  # (K, N, r)
-        corr = jnp.einsum("ikr,kjr->ij", ue, ve)
-        return (exact_int + corr) * scale
-
-    if mode == "inject":
-        if key is None:
-            raise ValueError("mode='inject' needs a PRNG key")
-        mean, std = error_moments(n, t, fix_to_1)
-        k_dim = x.shape[-1]
-        noise = mean * k_dim + std * jnp.sqrt(jnp.float32(k_dim)) * jax.random.normal(
-            key, exact_int.shape, jnp.float32
-        )
-        return (exact_int + noise) * scale
-
-    raise ValueError(f"unknown mode {mode!r}")
+    return _dispatch.matmul(
+        x, w, n=n, t=t, fix_to_1=fix_to_1, mode=mode, rank=rank, key=key,
+        backend="reference",
+    )

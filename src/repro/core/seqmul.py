@@ -16,6 +16,9 @@ Bit-exactness against the paper's boolean Ŝ/Ĉ recurrences is asserted in
 Supported bit-widths: 1 <= n <= 32 (every internal word then fits uint32;
 final products are assembled on host in uint64).  This covers the paper's
 exhaustive range (n <= 16) and its Monte-Carlo range (n = 32).
+
+The recurrence body itself lives in ``repro.engine.recurrence`` — the
+single copy shared with the Pallas kernel (`kernels.seqmul_kernel`).
 """
 
 from __future__ import annotations
@@ -27,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.recurrence import MAX_N, pack_u32, seqmul_recurrence, validate_nt
+
 __all__ = [
     "ProductWords",
     "seq_mul_words",
@@ -35,8 +40,6 @@ __all__ = [
     "assemble_product_u64",
     "MAX_N",
 ]
-
-MAX_N = 32
 
 
 class ProductWords(NamedTuple):
@@ -57,13 +60,6 @@ class ProductWords(NamedTuple):
     s_lsp: jax.Array
     s_msp: jax.Array
     c_last: jax.Array
-
-
-def _validate(n: int, t: int) -> None:
-    if not (1 <= n <= MAX_N):
-        raise ValueError(f"bit-width n={n} out of supported range [1, {MAX_N}]")
-    if not (1 <= t <= n - 1):
-        raise ValueError(f"splitting point t={t} must satisfy 1 <= t <= n-1={n - 1}")
 
 
 def seq_mul_words_impl(
@@ -90,39 +86,12 @@ def seq_mul_words_impl(
         [0, n+t) to 1 (the paper's error-compensation multiplexers).
         Ignored for the exact multiplier.
     """
-    _validate(n, t)
+    validate_nt(n, t)
     a = jnp.asarray(a, jnp.uint32)
     b = jnp.asarray(b, jnp.uint32)
-    m_t = jnp.uint32((1 << t) - 1)
-    one = jnp.uint32(1)
-    zero = jnp.zeros_like(a)
-
-    def cycle(j, state):
-        s_lsp, s_msp, c_ff, lo = state
-        b_j = (b >> j.astype(jnp.uint32)) & one
-        m = jnp.where(b_j.astype(bool), a, zero)
-        m_lsp = m & m_t
-        m_msp = m >> t
-        # augend = S^{j-1} >> 1 (bit t-1 of the LSP receives bit t = MSP LSB)
-        aug_lsp = (s_lsp >> 1) | ((s_msp & one) << (t - 1))
-        aug_msp = s_msp >> 1
-        lsum = aug_lsp + m_lsp  # t+1 bits
-        c_out = lsum >> t  # Ĉ_{t-1}^{j}: LSP carry-out of this cycle
-        # exact: consume the LSP carry now; approx: consume last cycle's.
-        c_in = c_ff if approx else c_out
-        msum = aug_msp + m_msp + c_in  # n-t+1 bits (incl. S_n)
-        lo = lo | ((lsum & one) << j.astype(jnp.uint32))
-        return lsum & m_t, msum, c_out, lo
-
-    init = (zero, zero, zero, zero)
-    s_lsp, s_msp, c_last, lo = jax.lax.fori_loop(0, n, cycle, init)
-    lo = lo & jnp.uint32((1 << (n - 1)) - 1) if n > 1 else jnp.zeros_like(lo)
-
-    if approx and fix_to_1:
-        hit = c_last.astype(bool)
-        lo = jnp.where(hit, jnp.uint32((1 << (n - 1)) - 1) if n > 1 else jnp.uint32(0), lo)
-        s_lsp = jnp.where(hit, m_t, s_lsp)
-        s_msp = jnp.where(hit, s_msp | one, s_msp)
+    lo, s_lsp, s_msp, c_last = seqmul_recurrence(
+        a, b, n=n, t=t, approx=approx, fix_to_1=fix_to_1
+    )
     return ProductWords(lo, s_lsp, s_msp, c_last)
 
 
@@ -142,8 +111,7 @@ def _packed(a, b, n, t, approx, fix_to_1):
     if 2 * n > 31:
         raise ValueError(f"packed u32 product needs 2n <= 31 bits, got n={n}; use seq_mul_words")
     w = seq_mul_words(a, b, n=n, t=t, approx=approx, fix_to_1=fix_to_1)
-    s = w.s_lsp + (w.s_msp << t)
-    return w.lo + (s << (n - 1))
+    return pack_u32(w.lo, w.s_lsp, w.s_msp, n=n, t=t)
 
 
 def seq_mul_exact_u32(a: jax.Array, b: jax.Array, *, n: int) -> jax.Array:

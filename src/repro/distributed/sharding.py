@@ -25,18 +25,81 @@ DP = ("pod", "data")  # logical data-parallel axes (present subset is used)
 TP = "model"
 FSDP = "data"
 
-__all__ = ["DP", "TP", "FSDP", "constrain", "param_spec", "param_specs", "mesh_axis_sizes"]
+__all__ = [
+    "DP", "TP", "FSDP", "ambient_mesh", "mesh_context", "make_auto_mesh",
+    "shard_map", "constrain", "param_spec", "param_specs", "mesh_axis_sizes",
+]
 
 
-def _abstract_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or m.empty:
+def ambient_mesh():
+    """The mesh the current trace runs under, or None — across jax versions.
+
+    Newer jax exposes ``jax.sharding.get_abstract_mesh`` (set by
+    ``jax.sharding.set_mesh``/``use_mesh``); older releases (< 0.5) only
+    have the thread-local physical mesh installed by ``with mesh:``.
+    Every rule in this module degrades to a no-op when this returns None,
+    so the same model code runs on one CPU device and on the production
+    mesh regardless of the installed jax.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        try:
+            m = get()
+        except Exception:
+            m = None
+        if m is not None and not getattr(m, "empty", True):
+            return m
+    try:
+        from jax._src import mesh as _mesh_lib
+
+        pm = _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
         return None
-    return m
+    if pm is None or pm.empty:
+        return None
+    return pm
+
+
+def mesh_context(mesh):
+    """Context manager installing ``mesh`` for the duration of a trace.
+
+    ``jax.sharding.set_mesh`` where available, the legacy ``with mesh:``
+    resource-env context otherwise.
+    """
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def make_auto_mesh(shape: tuple, axes: tuple):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions, replication checks off.
+
+    Newer jax spells it ``jax.shard_map(..., check_vma=False)``; older
+    releases have ``jax.experimental.shard_map.shard_map(...,
+    check_rep=False)``.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+        except TypeError:  # intermediate releases: check_rep spelling on jax.shard_map
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _sm  # jax < 0.6
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
 
 def mesh_axis_sizes(mesh=None) -> dict:
-    m = mesh or _abstract_mesh()
+    m = mesh or ambient_mesh()
     if m is None:
         return {}
     return dict(zip(m.axis_names, m.axis_sizes if hasattr(m, "axis_sizes") else m.shape.values()))
@@ -72,11 +135,14 @@ def resolve_spec(spec: tuple, shape: tuple, sizes: dict) -> P:
 
 def constrain(x: jax.Array, *spec) -> jax.Array:
     """with_sharding_constraint that adapts to (or skips without) the mesh."""
-    m = _abstract_mesh()
+    m = ambient_mesh()
     if m is None:
         return x
     sizes = mesh_axis_sizes(m)
-    return jax.lax.with_sharding_constraint(x, resolve_spec(tuple(spec), x.shape, sizes))
+    resolved = resolve_spec(tuple(spec), x.shape, sizes)
+    if isinstance(m, jax.sharding.Mesh):  # concrete mesh (legacy `with mesh:` path)
+        return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(m, resolved))
+    return jax.lax.with_sharding_constraint(x, resolved)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,58 @@
+"""Backend-dispatching engine for the approximate-multiply stack.
+
+The one home of (a) the execution-mode registry (`repro.engine.modes`),
+(b) the reference/pallas backend abstraction with the shared
+interpret/native policy (`repro.engine.policy`), (c) the device-side
+artifact cache for product/error LUTs and SVD factors
+(`repro.engine.artifacts`), and (d) the split-word multiplier recurrence
+shared by the jnp reference and the Pallas kernel
+(`repro.engine.recurrence`).
+
+Public API (see README §Engine)::
+
+    from repro import engine
+    y = engine.matmul(x, w, n=8, t=4, mode="bitexact")   # (M,K)@(K,N) f32
+    p = engine.multiply(a, b, n=8, t=4)                  # elementwise u32
+    engine.list_modes()       # ['bitexact', 'exact', 'fakequant', ...]
+    engine.BACKENDS           # ('auto', 'reference', 'pallas')
+
+Submodules are imported lazily so that leaf modules (``recurrence``,
+``policy``) stay importable from ``repro.core``/``repro.kernels`` without
+circular imports.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.engine.policy import resolve_interpret, use_interpret  # noqa: F401 (leaf, safe eager)
+
+_LAZY = {
+    "matmul": "dispatch",
+    "multiply": "dispatch",
+    "BACKENDS": "dispatch",
+    "resolve_backend": "dispatch",
+    "list_modes": "modes",
+    "get_mode": "modes",
+    "register_mode": "modes",
+    "ModeSpec": "modes",
+    "GemmParams": "modes",
+    "quantize_operands": "modes",
+    "bitexact_gemm_int": "modes",
+    "artifacts": None,
+    "dispatch": None,
+    "modes": None,
+    "policy": None,
+    "recurrence": None,
+}
+
+__all__ = ["use_interpret", "resolve_interpret"] + sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        target = _LAZY[name]
+        if target is None:  # submodule itself
+            return importlib.import_module(f"repro.engine.{name}")
+        return getattr(importlib.import_module(f"repro.engine.{target}"), name)
+    raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")

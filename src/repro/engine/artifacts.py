@@ -1,0 +1,90 @@
+"""One device-side artifact cache for the whole approximate-multiply stack.
+
+Product LUTs, error LUTs, SVD error factors and error moments used to be
+cached independently by ``core.approx_matmul``, ``kernels.ops`` and
+``models.layers``; this module is now the single owner.  Everything is
+``lru_cache``d per (n, t, ...) configuration, and device conversion runs
+under ``jax.ensure_compile_time_eval`` so the caches hold *concrete*
+arrays even when first populated inside a jit/scan trace (e.g. an
+ApproxDense inside a scanned layer group).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import luts
+
+__all__ = [
+    "product_lut",
+    "product_lut_flat",
+    "error_lut",
+    "svd_factors",
+    "error_moments",
+]
+
+
+@functools.lru_cache(maxsize=16)
+def product_lut(n: int, t: int, fix_to_1: bool = True) -> jax.Array:
+    """(2^n, 2^n) int32 approximate-product table, on device."""
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(luts.product_lut(n, t, fix_to_1=fix_to_1))
+
+
+@functools.lru_cache(maxsize=16)
+def product_lut_flat(n: int, t: int, fix_to_1: bool = True) -> jax.Array:
+    """(2^{2n},) flattened product table (the Pallas LUT kernel's layout)."""
+    with jax.ensure_compile_time_eval():
+        return product_lut(n, t, fix_to_1).reshape(-1)
+
+
+@functools.lru_cache(maxsize=16)
+def error_lut(n: int, t: int, fix_to_1: bool = True) -> jax.Array:
+    """(2^n, 2^n) int32 signed error table (approx - exact), on device."""
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(luts.error_lut(n, t, fix_to_1=fix_to_1))
+
+
+@functools.lru_cache(maxsize=16)
+def svd_factors(n: int, t: int, rank: int, fix_to_1: bool = True):
+    """Rank-``rank`` SVD factors (u, v, energy) of the error table, on device."""
+    u, v, energy = luts.svd_error_factors(n, t, rank, fix_to_1=fix_to_1)
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(u), jnp.asarray(v), energy
+
+
+@functools.lru_cache(maxsize=32)
+def error_moments(
+    n: int, t: int, fix_to_1: bool = True, dist: str = "gaussian"
+) -> tuple[float, float]:
+    """(mean, std) of the signed error table under an operand distribution.
+
+    ``dist="uniform"`` is the paper's Fig. 2 setting.  ``dist="gaussian"``
+    weights the table by the magnitude PDF of absmax-quantized Gaussian
+    activations (|x| ~ folded normal, absmax ≈ 4σ): real activations
+    concentrate at small magnitudes where carries rarely cross the split,
+    so uniform moments overestimate the injected error by ~an order of
+    magnitude (measured in benchmarks/gemm_modes.py).
+    """
+    e = luts.error_lut(n, t, fix_to_1=fix_to_1).astype(np.float64)
+    if dist == "uniform":
+        mean, var = float(e.mean()), float(e.var())
+    elif dist == "gaussian":
+        mags = np.arange(1 << n, dtype=np.float64)
+        sigma = (2**n - 1) / 4.0  # absmax calibration: max |x| ~ 4 sigma
+        p = np.exp(-0.5 * (mags / sigma) ** 2)
+        p /= p.sum()
+        w = np.outer(p, p)
+        mean = float((w * e).sum())
+        var = float((w * e * e).sum()) - mean * mean
+    else:
+        raise ValueError(f"dist must be 'uniform' or 'gaussian', got {dist!r}")
+    # signed sign-magnitude operands: the error rides sign_a*sign_b, whose
+    # expectation is 0 for symmetric activations/weights — the *signed*
+    # per-product error has zero mean and second moment mean^2 + var
+    # (validated empirically in benchmarks/gemm_modes.py).
+    return 0.0, float(np.sqrt(max(var + mean * mean, 0.0)))

@@ -1,0 +1,121 @@
+"""The single dispatch layer for approximate multiplication.
+
+``matmul`` is the one framework-facing approximate GEMM: it quantizes,
+looks the mode up in the registry (`repro.engine.modes`), picks a backend
+(``reference`` jnp or ``pallas``, with interpret/native auto-selection via
+the shared `repro.engine.policy`), and applies the engine-level
+straight-through gradient rule to non-differentiable modes so every mode
+is trainable without call sites re-implementing gradient hygiene.
+
+``multiply`` is the elementwise counterpart on uint32 magnitudes.
+
+Backends
+--------
+``reference``  pure-jnp bodies (compile everywhere; the oracle).
+``pallas``     tiled VMEM-resident kernels (native on TPU, interpret mode
+               elsewhere per ``policy.use_interpret``).  Modes without a
+               Pallas body fall back to their reference body.
+``auto``       ``pallas`` when a Pallas body exists and the policy says
+               native lowering is available, else ``reference``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import seqmul as _seqmul
+from repro.engine import modes as _modes
+from repro.engine.policy import use_interpret
+
+__all__ = ["BACKENDS", "matmul", "multiply", "resolve_backend"]
+
+BACKENDS = ("auto", "reference", "pallas")
+
+
+def resolve_backend(backend: str, spec: _modes.ModeSpec | None = None) -> str:
+    """Map ``auto`` onto a concrete backend; reject unknown names."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; valid backends: {list(BACKENDS)}")
+    if backend != "auto":
+        return backend
+    has_pallas = spec is None or spec.pallas is not None
+    return "pallas" if (has_pallas and not use_interpret()) else "reference"
+
+
+def _straight_through(impl, p, x, w, extra):
+    """Forward ``impl(x, w, p, *extra)``; backward = exact-matmul grads.
+
+    ``extra`` must be f32 arrays (they receive zero cotangents) and is
+    passed explicitly because ``custom_vjp`` cannot close over tracers.
+    """
+
+    @jax.custom_vjp
+    def f(x, w, extra):
+        return impl(x, w, p, *extra)
+
+    def fwd(x, w, extra):
+        return impl(x, w, p, *extra), (x, w, extra)
+
+    def bwd(res, g):
+        x, w, extra = res
+        return (g @ w.T, x.T @ g, jax.tree_util.tree_map(jnp.zeros_like, extra))
+
+    f.defvjp(fwd, bwd)
+    return f(x, w, extra)
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    n: int = 8,
+    t: int = 4,
+    fix_to_1: bool = True,
+    mode: str = "bitexact",
+    rank: int = 8,
+    key: jax.Array | None = None,
+    backend: str = "auto",
+) -> jax.Array:
+    """Approximate GEMM: x (M, K) @ w (K, N) -> (M, N) f32.
+
+    Raises ``ValueError`` (listing the valid names) for an unknown
+    ``mode`` or ``backend``, and when a stochastic mode is called
+    without a PRNG ``key``.
+    """
+    spec = _modes.get_mode(mode)
+    resolved = resolve_backend(backend, spec)
+    if spec.needs_key and key is None:
+        raise ValueError(f"mode {mode!r} needs a PRNG key")
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    p = _modes.GemmParams(n=n, t=t, fix_to_1=fix_to_1, rank=rank)
+    extra = spec.prepare(x, w, p, key) if spec.prepare is not None else ()
+    impl = spec.pallas if (resolved == "pallas" and spec.pallas is not None) else spec.reference
+    if spec.differentiable:
+        return impl(x, w, p, *extra)
+    return _straight_through(impl, p, x, w, tuple(extra))
+
+
+def multiply(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    n: int = 8,
+    t: int = 4,
+    approx: bool = True,
+    fix_to_1: bool = True,
+    backend: str = "auto",
+) -> jax.Array:
+    """Elementwise (approximate) product of uint32 magnitudes, any shape.
+
+    Returns the packed 2n-bit product in uint32 (requires 2n <= 31).
+    """
+    resolved = resolve_backend(backend)
+    if resolved == "pallas":
+        from repro.kernels.seqmul_kernel import seqmul_pallas
+
+        return seqmul_pallas(a, b, n=n, t=t, approx=approx, fix_to_1=fix_to_1)
+    if approx:
+        return _seqmul.seq_mul_approx_u32(a, b, n=n, t=t, fix_to_1=fix_to_1)
+    return _seqmul.seq_mul_exact_u32(a, b, n=n)

@@ -1,0 +1,266 @@
+"""Mode registry for the approximate-GEMM engine.
+
+Every execution mode of the paper's accuracy-configurable multiplier is a
+registered :class:`ModeSpec` carrying its reference (pure-jnp) body, its
+optional Pallas body, and its gradient/PRNG requirements.  Consumers
+never branch on mode strings: ``repro.engine.matmul`` looks the mode up
+here and dispatches; an unknown name raises with the list of valid names.
+
+Built-in modes
+--------------
+``exact``      plain f32 matmul (the baseline the paper compares against).
+``bitexact``   every scalar product is the paper's approximate multiplier,
+               via the (2^n, 2^n) product LUT (n <= 8): faithful
+               semantics; gather-bound on the VPU, LUT kernel on TPU.
+``lowrank``    exact matmul + rank-r SVD correction of the error table —
+               both terms run on the MXU.  Beyond-paper optimization.
+``inject``     exact matmul + moment-matched Gaussian error injection
+               (mean/var calibrated from the error table, scaled by √K):
+               O(1) overhead surrogate for 1000-node approximate-aware
+               training.
+``fakequant``  straight-through fake quantization of both operands (QAT
+               substrate; no multiplier error model).
+
+Third parties can ``register_mode`` additional entries; the engine's
+straight-through gradient rule applies automatically to any mode with
+``differentiable=False``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization
+from repro.engine import artifacts
+
+__all__ = [
+    "GemmParams",
+    "ModeSpec",
+    "register_mode",
+    "get_mode",
+    "list_modes",
+    "resolve_key",
+    "quantize_operands",
+    "bitexact_gemm_int",
+]
+
+
+class GemmParams(NamedTuple):
+    """Static configuration threaded to every mode body."""
+
+    n: int
+    t: int
+    fix_to_1: bool
+    rank: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeSpec:
+    """One registered execution mode.
+
+    ``reference``/``pallas`` have signature ``(x, w, p, *extra) -> out``
+    on f32 2-D operands; ``extra`` is whatever ``prepare`` returned (f32
+    arrays only — they receive zero cotangents under the straight-through
+    rule).  ``pallas=None`` means the reference body runs on every
+    backend.  ``differentiable=False`` makes the engine wrap the forward
+    in a straight-through ``custom_vjp`` whose backward is the exact
+    matmul gradient, so the mode is trainable without call sites
+    re-implementing gradient hygiene.
+    """
+
+    name: str
+    reference: Callable
+    pallas: Optional[Callable] = None
+    prepare: Optional[Callable] = None  # (x, w, p, key) -> tuple of f32 arrays
+    needs_key: bool = False
+    differentiable: bool = True
+    description: str = ""
+
+
+_REGISTRY: dict[str, ModeSpec] = {}
+
+
+def register_mode(spec: ModeSpec) -> ModeSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"mode {spec.name!r} is already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_mode(name: str) -> ModeSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown mode {name!r}; registered modes: {list_modes()}"
+        ) from None
+
+
+def list_modes() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve_key(mode: str, key):
+    """The PRNG key a model layer should hand to ``matmul`` for ``mode``.
+
+    Stochastic modes with no key fall back to a fixed default key — the
+    deterministic-eval behavior shared by the dense and MoE layers.
+    (``matmul`` itself stays strict and raises without a key, so direct
+    engine callers can't silently reuse noise.)
+    """
+    if get_mode(mode).needs_key and key is None:
+        return jax.random.PRNGKey(0)
+    return key
+
+
+# ------------------------------------------------------------------ helpers
+def quantize_operands(x: jax.Array, w: jax.Array, n: int):
+    """Sign-magnitude absmax quantization of both GEMM operands.
+
+    Returns ``((mag_x, sign_x), (mag_w, sign_w), scale)`` with the
+    calibration stop-gradiented (scales are data, not parameters).
+    """
+    qx = quantization.calibrate_absmax(jax.lax.stop_gradient(x), bits=n)
+    qw = quantization.calibrate_absmax(jax.lax.stop_gradient(w), bits=n)
+    mx, sx = quantization.quantize(x, qx)
+    mw, sw = quantization.quantize(w, qw)
+    return (mx, sx), (mw, sw), qx.scale * qw.scale
+
+
+def bitexact_gemm_int(
+    mag_a: jax.Array,
+    sign_a: jax.Array,
+    mag_b: jax.Array,
+    sign_b: jax.Array,
+    *,
+    n: int,
+    t: int,
+    fix_to_1: bool = True,
+) -> jax.Array:
+    """Bit-exact signed approximate GEMM on integer sign-magnitude operands.
+
+    mag_a (M, K) uint32, mag_b (K, N) uint32, signs int8.  Returns f32
+    (M, N) — accumulations are float32, exact for n <= 8 and K <= 2^8
+    (|sum| < 2^24); asserted in tests.
+    """
+    lut = artifacts.product_lut_flat(n, t, fix_to_1)
+    idx = mag_a[:, :, None] * jnp.uint32(1 << n) + mag_b[None, :, :]
+    prod = jnp.take(lut, idx.astype(jnp.int32), axis=0)  # (M, K, N)
+    signed = prod.astype(jnp.float32) * (
+        sign_a.astype(jnp.float32)[:, :, None] * sign_b.astype(jnp.float32)[None, :, :]
+    )
+    return signed.sum(axis=1)
+
+
+# ------------------------------------------------------------ mode bodies
+def _exact_ref(x, w, p):
+    return x @ w
+
+
+def _bitexact_ref(x, w, p):
+    (mx, sx), (mw, sw), scale = quantize_operands(x, w, p.n)
+    acc = bitexact_gemm_int(mx, sx, mw, sw, n=p.n, t=p.t, fix_to_1=p.fix_to_1)
+    return acc * scale
+
+
+def _bitexact_pallas(x, w, p):
+    from repro.kernels.lut_matmul import lut_matmul_pallas
+
+    (mx, sx), (mw, sw), scale = quantize_operands(x, w, p.n)
+    out = lut_matmul_pallas(
+        artifacts.product_lut_flat(p.n, p.t, p.fix_to_1),
+        mx,
+        sx.astype(jnp.float32),
+        mw,
+        sw.astype(jnp.float32),
+        n=p.n,
+    )
+    return out * scale
+
+
+def _lowrank_embed(mx, sx, mw, sw, p):
+    u, v, _ = artifacts.svd_factors(p.n, p.t, p.rank, p.fix_to_1)
+    ue = u[mx.astype(jnp.int32)] * sx.astype(jnp.float32)[..., None]  # (M, K, r)
+    ve = v[mw.astype(jnp.int32)] * sw.astype(jnp.float32)[..., None]  # (K, N, r)
+    return ue, ve
+
+
+def _lowrank_ref(x, w, p):
+    (mx, sx), (mw, sw), scale = quantize_operands(x, w, p.n)
+    ax = mx.astype(jnp.float32) * sx.astype(jnp.float32)
+    aw = mw.astype(jnp.float32) * sw.astype(jnp.float32)
+    ue, ve = _lowrank_embed(mx, sx, mw, sw, p)
+    corr = jnp.einsum("ikr,kjr->ij", ue, ve)
+    return (ax @ aw + corr) * scale
+
+
+def _lowrank_pallas(x, w, p):
+    from repro.kernels.lowrank_matmul import lowrank_matmul_pallas
+
+    (mx, sx), (mw, sw), scale = quantize_operands(x, w, p.n)
+    ax = mx.astype(jnp.float32) * sx.astype(jnp.float32)
+    aw = mw.astype(jnp.float32) * sw.astype(jnp.float32)
+    ue, ve = _lowrank_embed(mx, sx, mw, sw, p)
+    out = lowrank_matmul_pallas(ax, aw, ue, ve, rank=p.rank)
+    return out * scale
+
+
+def _inject_prepare(x, w, p, key):
+    """Pre-draw the moment-matched noise (shape is static: (M, N))."""
+    mean, std = artifacts.error_moments(p.n, p.t, p.fix_to_1)
+    k_dim = x.shape[-1]
+    noise = mean * k_dim + std * jnp.sqrt(jnp.float32(k_dim)) * jax.random.normal(
+        key, (x.shape[0], w.shape[-1]), jnp.float32
+    )
+    return (noise,)
+
+
+def _inject_ref(x, w, p, noise):
+    (mx, sx), (mw, sw), scale = quantize_operands(x, w, p.n)
+    ax = mx.astype(jnp.float32) * sx.astype(jnp.float32)
+    aw = mw.astype(jnp.float32) * sw.astype(jnp.float32)
+    return (ax @ aw + noise) * scale
+
+
+def _fakequant_ref(x, w, p):
+    xq = quantization.fake_quant(x, bits=p.n)
+    wq = quantization.fake_quant(w, bits=p.n)
+    return xq @ wq
+
+
+register_mode(ModeSpec(
+    name="exact",
+    reference=_exact_ref,
+    description="plain f32 matmul (baseline)",
+))
+register_mode(ModeSpec(
+    name="bitexact",
+    reference=_bitexact_ref,
+    pallas=_bitexact_pallas,
+    differentiable=False,
+    description="faithful paper semantics via the (2^n, 2^n) product LUT",
+))
+register_mode(ModeSpec(
+    name="lowrank",
+    reference=_lowrank_ref,
+    pallas=_lowrank_pallas,
+    differentiable=False,
+    description="exact GEMM + rank-r SVD error correction (MXU-friendly)",
+))
+register_mode(ModeSpec(
+    name="inject",
+    reference=_inject_ref,
+    prepare=_inject_prepare,
+    needs_key=True,
+    differentiable=False,
+    description="moment-matched stochastic error injection (O(1) at scale)",
+))
+register_mode(ModeSpec(
+    name="fakequant",
+    reference=_fakequant_ref,
+    description="straight-through fake quantization (QAT substrate)",
+))

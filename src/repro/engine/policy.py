@@ -1,0 +1,30 @@
+"""Shared backend-selection policy for the approximate-multiply engine.
+
+Every Pallas entry point in the repo resolves its ``interpret`` flag
+through this single policy instead of hard-coding a default: on TPU the
+kernels lower natively, everywhere else (CPU containers, unit tests) they
+run in interpret mode.  ``REPRO_FORCE_INTERPRET=1`` forces interpret
+anywhere (debugging on TPU); ``REPRO_FORCE_INTERPRET=0`` forces native
+lowering (e.g. GPU Triton backends, at your own risk).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["use_interpret", "resolve_interpret"]
+
+
+def use_interpret() -> bool:
+    """True when Pallas kernels should run in interpret mode."""
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve an explicit override (bool) or the shared policy (None)."""
+    return use_interpret() if interpret is None else bool(interpret)

@@ -1,0 +1,99 @@
+"""The paper's split-word accumulate-and-shift recurrence — single source.
+
+The n-cycle sequential multiplication is carried out with the accumulator
+*already split* at the splitting point ``t`` into an LSP word (t bits) and
+an MSP word (n - t + 1 bits, including the adder carry-out S_n).  Exact
+and approximate multipliers are the *same* recurrence, differing only in
+whether the LSP carry-out is consumed within the cycle (exact: ripple
+across the split) or deferred by one clock through the D flip-flop
+(approximate: the paper's segmented carry chain).
+
+This module is the one recurrence body in the tree: the jnp reference
+(``core.seqmul``) and the Pallas kernel (``kernels.seqmul_kernel``) both
+import it, so bit-exactness between them is structural.  It deliberately
+has no repro-internal imports — it must be traceable both at the jax
+level and inside a Pallas kernel body.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MAX_N", "validate_nt", "seqmul_recurrence", "pack_u32"]
+
+MAX_N = 32
+
+
+def validate_nt(n: int, t: int) -> None:
+    if not (1 <= n <= MAX_N):
+        raise ValueError(f"bit-width n={n} out of supported range [1, {MAX_N}]")
+    if not (1 <= t <= n - 1):
+        raise ValueError(f"splitting point t={t} must satisfy 1 <= t <= n-1={n - 1}")
+
+
+def seqmul_recurrence(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    n: int,
+    t: int,
+    approx: bool,
+    fix_to_1: bool,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Run the n-cycle recurrence, vectorized elementwise over uint32 words.
+
+    Args:
+      a: multiplier, uint32, values in [0, 2**n).
+      b: multiplicand, uint32, same shape as ``a``.
+      n: operand bit-width.
+      t: splitting point (LSP is t bits wide).  For ``approx=False`` the
+        result is independent of ``t`` (the split add with an immediate
+        carry is an exact add); the parameter is kept so exact/approx
+        share this one code path.
+      approx: defer the LSP carry-out by one cycle (segmented carry chain).
+      fix_to_1: on a final-cycle LSP carry-out, force product bits
+        [0, n+t) to 1 (the paper's error-compensation multiplexers).
+        Ignored for the exact multiplier.
+
+    Returns:
+      ``(lo, s_lsp, s_msp, c_last)`` uint32 words: ``lo`` holds product
+      bits [0, n-1), ``s_lsp``/``s_msp`` the final accumulator
+      S^{n-1} = product bits [n-1, 2n], and ``c_last`` the LSP carry-out
+      of the final accumulation, Ĉ_{t-1}^{n-1} (always 0 when exact).
+    """
+    validate_nt(n, t)
+    m_t = jnp.uint32((1 << t) - 1)
+    one = jnp.uint32(1)
+    zero = jnp.zeros_like(a)
+
+    def cycle(j, state):
+        s_lsp, s_msp, c_ff, lo = state
+        b_j = (b >> j.astype(jnp.uint32)) & one
+        m = jnp.where(b_j.astype(bool), a, zero)
+        # augend = S^{j-1} >> 1 (bit t-1 of the LSP receives bit t = MSP LSB)
+        aug_lsp = (s_lsp >> 1) | ((s_msp & one) << (t - 1))
+        aug_msp = s_msp >> 1
+        lsum = aug_lsp + (m & m_t)  # t+1 bits
+        c_out = lsum >> t  # Ĉ_{t-1}^{j}: LSP carry-out of this cycle
+        # exact: consume the LSP carry now; approx: consume last cycle's.
+        c_in = c_ff if approx else c_out
+        msum = aug_msp + (m >> t) + c_in  # n-t+1 bits (incl. S_n)
+        lo = lo | ((lsum & one) << j.astype(jnp.uint32))
+        return lsum & m_t, msum, c_out, lo
+
+    init = (zero, zero, zero, zero)
+    s_lsp, s_msp, c_last, lo = jax.lax.fori_loop(0, n, cycle, init)
+    lo = lo & jnp.uint32((1 << (n - 1)) - 1) if n > 1 else jnp.zeros_like(lo)
+
+    if approx and fix_to_1:
+        hit = c_last.astype(bool)
+        lo = jnp.where(hit, jnp.uint32((1 << (n - 1)) - 1) if n > 1 else jnp.uint32(0), lo)
+        s_lsp = jnp.where(hit, m_t, s_lsp)
+        s_msp = jnp.where(hit, s_msp | one, s_msp)
+    return lo, s_lsp, s_msp, c_last
+
+
+def pack_u32(lo: jax.Array, s_lsp: jax.Array, s_msp: jax.Array, *, n: int, t: int) -> jax.Array:
+    """Pack the split-word product into a single uint32 (valid for 2n <= 31)."""
+    return lo + ((s_lsp + (s_msp << t)) << (n - 1))

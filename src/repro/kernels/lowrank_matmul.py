@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.engine.policy import resolve_interpret
+
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 128
@@ -41,17 +43,17 @@ def _kernel(a_ref, b_ref, ue_ref, ve_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("rank", "bm", "bn", "bk", "interpret"))
-def lowrank_matmul_pallas(
+def _lowrank_matmul_jit(
     a: jax.Array,  # (M, K) f32 — signed quantized integer values
     b: jax.Array,  # (K, N) f32
     ue: jax.Array,  # (M, K, r) f32 — s_a * U[|a|]
     ve: jax.Array,  # (K, N, r) f32 — s_b * V[|b|]
     *,
     rank: int,
-    bm: int = DEFAULT_BM,
-    bn: int = DEFAULT_BN,
-    bk: int = DEFAULT_BK,
-    interpret: bool = True,
+    bm: int,
+    bn: int,
+    bk: int,
+    interpret: bool,
 ) -> jax.Array:
     m_dim, k_dim = a.shape
     _, n_dim = b.shape
@@ -84,3 +86,25 @@ def lowrank_matmul_pallas(
         interpret=interpret,
     )(ap, bp, uep, vep)
     return out[:m_dim, :n_dim]
+
+
+def lowrank_matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    ue: jax.Array,
+    ve: jax.Array,
+    *,
+    rank: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused exact + low-rank-correction GEMM (see module docstring).
+
+    ``interpret=None`` resolves through the engine's shared backend policy.
+    """
+    return _lowrank_matmul_jit(
+        a, b, ue, ve, rank=rank, bm=bm, bn=bn, bk=bk,
+        interpret=resolve_interpret(interpret),
+    )

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.engine.policy import resolve_interpret
+
 DEFAULT_BM = 64
 DEFAULT_BN = 64
 DEFAULT_BK = 64
@@ -43,24 +45,19 @@ def _kernel(lut_ref, ma_ref, sa_ref, mb_ref, sb_ref, o_ref, *, n: int):
 @functools.partial(
     jax.jit, static_argnames=("n", "bm", "bn", "bk", "interpret")
 )
-def lut_matmul_pallas(
+def _lut_matmul_jit(
     lut: jax.Array,
     mag_a: jax.Array,
     sign_a: jax.Array,
     mag_b: jax.Array,
     sign_b: jax.Array,
     *,
-    n: int = 8,
-    bm: int = DEFAULT_BM,
-    bn: int = DEFAULT_BN,
-    bk: int = DEFAULT_BK,
-    interpret: bool = True,
+    n: int,
+    bm: int,
+    bn: int,
+    bk: int,
+    interpret: bool,
 ) -> jax.Array:
-    """(M, K) x (K, N) -> (M, N) f32 approximate GEMM.
-
-    lut: (2^n * 2^n,) or (2^n, 2^n) int32 product table.
-    mag_*: uint32 magnitudes in [0, 2^n); sign_*: f32/int8 in {-1, 0, 1}.
-    """
     m_dim, k_dim = mag_a.shape
     k2, n_dim = mag_b.shape
     assert k_dim == k2, (mag_a.shape, mag_b.shape)
@@ -92,3 +89,28 @@ def lut_matmul_pallas(
         interpret=interpret,
     )(lut, ma, sa, mb, sb)
     return out[:m_dim, :n_dim]
+
+
+def lut_matmul_pallas(
+    lut: jax.Array,
+    mag_a: jax.Array,
+    sign_a: jax.Array,
+    mag_b: jax.Array,
+    sign_b: jax.Array,
+    *,
+    n: int = 8,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(M, K) x (K, N) -> (M, N) f32 approximate GEMM.
+
+    lut: (2^n * 2^n,) or (2^n, 2^n) int32 product table.
+    mag_*: uint32 magnitudes in [0, 2^n); sign_*: f32/int8 in {-1, 0, 1}.
+    ``interpret=None`` resolves through the engine's shared backend policy.
+    """
+    return _lut_matmul_jit(
+        lut, mag_a, sign_a, mag_b, sign_b,
+        n=n, bm=bm, bn=bn, bk=bk, interpret=resolve_interpret(interpret),
+    )

@@ -1,58 +1,31 @@
-"""Public jit'd entry points for the approximate-arithmetic kernels.
+"""Compatibility shim over ``repro.engine`` (the old kernel entry points).
 
-Dispatch policy: on TPU the Pallas kernels compile natively; everywhere
-else (this CPU container, unit tests) they run in ``interpret=True`` mode.
-Set ``REPRO_FORCE_INTERPRET=0`` to force native lowering.
-
-``approx_matmul_kernel`` is the framework-facing API: a drop-in f32 GEMM
-whose scalar products follow the paper's segmented-carry-chain multiplier,
-with the execution strategy selected by ``mode`` (see core.approx_matmul).
+Historically this module owned the interpret policy, its own LUT/SVD
+device caches, and a mode-string dispatch — all of that now lives in
+``repro.engine`` (policy / artifacts / modes / dispatch).  These wrappers
+pin ``backend="pallas"`` to preserve the old behavior of always running
+the Pallas kernels (native on TPU, interpret elsewhere, per the shared
+policy).  New code should call ``repro.engine.matmul`` /
+``repro.engine.multiply`` directly.
 """
 
 from __future__ import annotations
 
-import functools
-import os
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.approx_matmul import error_moments as _error_moments
-from repro.core import luts, quantization
-from repro.kernels.lowrank_matmul import lowrank_matmul_pallas
-from repro.kernels.lut_matmul import lut_matmul_pallas
-from repro.kernels.seqmul_kernel import seqmul_pallas
+from repro.engine import dispatch as _engine
+from repro.engine.policy import use_interpret  # noqa: F401  (re-export)
 
 __all__ = ["use_interpret", "approx_multiply", "approx_matmul_kernel"]
-
-
-def use_interpret() -> bool:
-    env = os.environ.get("REPRO_FORCE_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
 
 
 def approx_multiply(
     a: jax.Array, b: jax.Array, *, n: int = 8, t: int = 4, fix_to_1: bool = True
 ) -> jax.Array:
     """Elementwise approximate product of uint32 magnitudes (Pallas)."""
-    return seqmul_pallas(
-        a, b, n=n, t=t, approx=True, fix_to_1=fix_to_1, interpret=use_interpret()
+    return _engine.multiply(
+        a, b, n=n, t=t, approx=True, fix_to_1=fix_to_1, backend="pallas"
     )
-
-
-@functools.lru_cache(maxsize=16)
-def _lut_dev(n: int, t: int, fix_to_1: bool):
-    with jax.ensure_compile_time_eval():  # cache concrete arrays, even under trace
-        return jnp.asarray(luts.product_lut(n, t, fix_to_1=fix_to_1)).reshape(-1)
-
-
-@functools.lru_cache(maxsize=16)
-def _svd_dev(n: int, t: int, rank: int, fix_to_1: bool):
-    u, v, _ = luts.svd_error_factors(n, t, rank, fix_to_1=fix_to_1)
-    with jax.ensure_compile_time_eval():
-        return jnp.asarray(u), jnp.asarray(v)
 
 
 def approx_matmul_kernel(
@@ -66,32 +39,8 @@ def approx_matmul_kernel(
     rank: int = 8,
 ) -> jax.Array:
     """f32 (M, K) @ (K, N) with approximate products, via Pallas kernels."""
-    x = jnp.asarray(x, jnp.float32)
-    w = jnp.asarray(w, jnp.float32)
-    qx = quantization.calibrate_absmax(jax.lax.stop_gradient(x), bits=n)
-    qw = quantization.calibrate_absmax(jax.lax.stop_gradient(w), bits=n)
-    mx, sx = quantization.quantize(x, qx)
-    mw, sw = quantization.quantize(w, qw)
-    scale = qx.scale * qw.scale
-    interp = use_interpret()
-
-    if mode == "bitexact":
-        out = lut_matmul_pallas(
-            _lut_dev(n, t, fix_to_1),
-            mx,
-            sx.astype(jnp.float32),
-            mw,
-            sw.astype(jnp.float32),
-            n=n,
-            interpret=interp,
-        )
-        return out * scale
-    if mode == "lowrank":
-        u, v = _svd_dev(n, t, rank, fix_to_1)
-        ax = mx.astype(jnp.float32) * sx.astype(jnp.float32)
-        aw = mw.astype(jnp.float32) * sw.astype(jnp.float32)
-        ue = u[mx.astype(jnp.int32)] * sx.astype(jnp.float32)[..., None]
-        ve = v[mw.astype(jnp.int32)] * sw.astype(jnp.float32)[..., None]
-        out = lowrank_matmul_pallas(ax, aw, ue, ve, rank=rank, interpret=interp)
-        return out * scale
-    raise ValueError(f"kernel modes are 'bitexact' | 'lowrank', got {mode!r}")
+    if mode not in ("bitexact", "lowrank"):
+        raise ValueError(f"kernel modes are 'bitexact' | 'lowrank', got {mode!r}")
+    return _engine.matmul(
+        x, w, n=n, t=t, fix_to_1=fix_to_1, mode=mode, rank=rank, backend="pallas"
+    )

@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.approx_matmul import approx_matmul_int
 from repro.core import seqmul as _sm
+from repro.engine.modes import bitexact_gemm_int as approx_matmul_int
 
 
 def seqmul_ref(

@@ -5,10 +5,14 @@ of uint32 word ops over (block_rows, 128) VMEM tiles — the lane dimension
 is the hardware's native 128, the sublane blocking is chosen so all live
 tiles (two inputs, one output, loop state) stay well under VMEM.
 
-The kernel body is the *same* split-word recurrence as the reference
-(`core.seqmul.seq_mul_words_impl`); only the memory orchestration
-(BlockSpec tiling, grid) is kernel-specific, so bit-exactness against the
-oracle is structural and asserted in tests over shape/dtype/config sweeps.
+The kernel body imports the *same* split-word recurrence as the reference
+(`repro.engine.recurrence`, also used by `core.seqmul`); only the memory
+orchestration (BlockSpec tiling, grid) is kernel-specific, so
+bit-exactness against the oracle is structural and asserted in tests over
+shape/dtype/config sweeps.
+
+``interpret=None`` (the default) resolves through the engine's shared
+backend policy: native lowering on TPU, interpret mode elsewhere.
 """
 
 from __future__ import annotations
@@ -19,65 +23,36 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.engine.policy import resolve_interpret
+from repro.engine.recurrence import pack_u32, seqmul_recurrence
+
 LANES = 128
 DEFAULT_BLOCK_ROWS = 64  # (64, 128) u32 tiles = 32 KiB per operand buffer
 
 
-def _seqmul_body(a, b, *, n: int, t: int, approx: bool, fix_to_1: bool):
-    m_t = jnp.uint32((1 << t) - 1)
-    one = jnp.uint32(1)
-    zero = jnp.zeros_like(a)
-
-    def cycle(j, state):
-        s_lsp, s_msp, c_ff, lo = state
-        b_j = (b >> j.astype(jnp.uint32)) & one
-        m = jnp.where(b_j.astype(bool), a, zero)
-        aug_lsp = (s_lsp >> 1) | ((s_msp & one) << (t - 1))
-        aug_msp = s_msp >> 1
-        lsum = aug_lsp + (m & m_t)
-        c_out = lsum >> t
-        c_in = c_ff if approx else c_out
-        msum = aug_msp + (m >> t) + c_in
-        lo = lo | ((lsum & one) << j.astype(jnp.uint32))
-        return lsum & m_t, msum, c_out, lo
-
-    s_lsp, s_msp, c_last, lo = jax.lax.fori_loop(0, n, cycle, (zero, zero, zero, zero))
-    lo = lo & jnp.uint32((1 << (n - 1)) - 1) if n > 1 else jnp.zeros_like(lo)
-    if approx and fix_to_1:
-        hit = c_last.astype(bool)
-        lo = jnp.where(hit, jnp.uint32((1 << (n - 1)) - 1) if n > 1 else jnp.uint32(0), lo)
-        s_lsp = jnp.where(hit, m_t, s_lsp)
-        s_msp = jnp.where(hit, s_msp | one, s_msp)
-    # packed 2n-bit product (valid for 2n <= 31)
-    return lo + ((s_lsp + (s_msp << t)) << (n - 1))
-
-
 def _kernel(a_ref, b_ref, o_ref, *, n, t, approx, fix_to_1):
-    o_ref[...] = _seqmul_body(
+    lo, s_lsp, s_msp, _ = seqmul_recurrence(
         a_ref[...], b_ref[...], n=n, t=t, approx=approx, fix_to_1=fix_to_1
     )
+    # packed 2n-bit product (valid for 2n <= 31)
+    o_ref[...] = pack_u32(lo, s_lsp, s_msp, n=n, t=t)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("n", "t", "approx", "fix_to_1", "block_rows", "interpret"),
 )
-def seqmul_pallas(
+def _seqmul_pallas_jit(
     a: jax.Array,
     b: jax.Array,
     *,
     n: int,
     t: int,
-    approx: bool = True,
-    fix_to_1: bool = True,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    approx: bool,
+    fix_to_1: bool,
+    block_rows: int,
+    interpret: bool,
 ) -> jax.Array:
-    """Elementwise approximate product of uint32 arrays (any shape).
-
-    Flattens, pads to a (rows, 128) layout, launches a 1-D grid of
-    (block_rows, 128) tiles, then restores the original shape.
-    """
     if 2 * n > 31:
         raise ValueError("packed kernel supports 2n <= 31 bits")
     shape = a.shape
@@ -102,3 +77,25 @@ def seqmul_pallas(
         interpret=interpret,
     )(a2, b2)
     return out.reshape(-1)[:flat].reshape(shape)
+
+
+def seqmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    n: int,
+    t: int,
+    approx: bool = True,
+    fix_to_1: bool = True,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Elementwise approximate product of uint32 arrays (any shape).
+
+    Flattens, pads to a (rows, 128) layout, launches a 1-D grid of
+    (block_rows, 128) tiles, then restores the original shape.
+    """
+    return _seqmul_pallas_jit(
+        a, b, n=n, t=t, approx=approx, fix_to_1=fix_to_1,
+        block_rows=block_rows, interpret=resolve_interpret(interpret),
+    )

@@ -40,7 +40,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, TrainConfig
 from repro.configs.registry import get_config, list_archs, shapes_for
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.distributed.sharding import mesh_context
+from repro.launch.hlo_analysis import analyze_hlo, xla_cost_dict
 from repro.launch.mesh import HW, make_production_mesh
 from repro.launch import specs as S
 from repro.models.registry import build_model
@@ -101,7 +102,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, *, extra: dict | Non
     kind = _step_kind(shape)
     t0 = time.time()
 
-    with jax.sharding.set_mesh(mesh):
+    with mesh_context(mesh):
         if kind == "train":
             tcfg = TrainConfig(grad_accum=accum)
             state_shapes = jax.eval_shape(
@@ -153,7 +154,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, *, extra: dict | Non
         compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_dict(compiled)
     hlo = compiled.as_text()
     ana = analyze_hlo(hlo)
     coll = {k: float(v) for k, v in ana.collective_bytes.items()}

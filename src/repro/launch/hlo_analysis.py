@@ -31,7 +31,19 @@ import re
 from collections import defaultdict
 from typing import Optional
 
-__all__ = ["Analysis", "OpRecord", "analyze_hlo", "COLLECTIVE_OPS"]
+__all__ = ["Analysis", "OpRecord", "analyze_hlo", "xla_cost_dict", "COLLECTIVE_OPS"]
+
+
+def xla_cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions.
+
+    Older jax returns a one-element list of dicts (per executable),
+    newer jax returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import apply_approx, get_config
+from repro.engine import modes as engine_modes
 from repro.models.registry import build_model
 from repro.train.steps import make_decode_step, make_prefill_step
 
@@ -32,7 +33,7 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--approx-mode", default=None)
+    ap.add_argument("--approx-mode", default=None, choices=engine_modes.list_modes())
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

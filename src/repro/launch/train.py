@@ -28,6 +28,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import TrainConfig
 from repro.configs.registry import apply_approx, get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.engine import modes as engine_modes
 from repro.models.registry import build_model
 from repro.runtime.fault import FailureInjector, StragglerMonitor, run_loop
 from repro.train.steps import init_train_state, make_train_step
@@ -44,8 +45,8 @@ def main() -> None:
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--opt-bits", type=int, default=32, choices=[8, 32])
     ap.add_argument("--compress", type=int, default=0, choices=[0, 8])
-    ap.add_argument("--approx-mode", default=None,
-                    help="fakequant|inject|lowrank|bitexact — deploy the paper technique")
+    ap.add_argument("--approx-mode", default=None, choices=engine_modes.list_modes(),
+                    help="deploy the paper technique via a registered engine mode")
     ap.add_argument("--approx-n", type=int, default=8)
     ap.add_argument("--approx-t", type=int, default=4)
     ap.add_argument("--ckpt-dir", default=None)

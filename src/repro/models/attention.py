@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import DP, TP, constrain
+from repro.distributed.sharding import DP, TP, ambient_mesh, constrain
 from repro.models import layers
 from repro.models.layers import Ctx
 
@@ -39,8 +39,7 @@ K_CHUNK = 1024
 
 
 def _no_mesh() -> bool:
-    m = jax.sharding.get_abstract_mesh()
-    return m is None or m.empty
+    return ambient_mesh() is None
 
 
 class KVCache(NamedTuple):

@@ -15,9 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ApproxConfig, ModelConfig
-from repro.core.approx_matmul import approx_matmul as _approx_matmul, error_moments as _error_moments
-from repro.core import quantization
 from repro.distributed.sharding import DP, TP, constrain
+from repro.engine import dispatch as _engine, modes as _engine_modes
 
 __all__ = ["Ctx", "rms_norm", "rope", "mrope", "dense", "mlp", "init_dense", "init_mlp"]
 
@@ -108,25 +107,10 @@ def mrope(x: jax.Array, positions: jax.Array, theta: float, sections: tuple) -> 
 
 # -------------------------------------------------------- approximate dense
 def _approx_2d(x2: jax.Array, w: jax.Array, ap: ApproxConfig, key) -> jax.Array:
-    if ap.mode == "fakequant":
-        xq = quantization.fake_quant(x2.astype(jnp.float32), bits=ap.n)
-        wq = quantization.fake_quant(w.astype(jnp.float32), bits=ap.n)
-        return xq @ wq
-    if ap.mode == "inject":
-        out = x2.astype(jnp.float32) @ w.astype(jnp.float32)
-        mean, std = _error_moments(ap.n, ap.t, ap.fix_to_1)
-        qx = quantization.calibrate_absmax(jax.lax.stop_gradient(x2), bits=ap.n)
-        qw = quantization.calibrate_absmax(jax.lax.stop_gradient(w), bits=ap.n)
-        scale = (qx.scale * qw.scale).astype(jnp.float32)
-        k_dim = x2.shape[-1]
-        if key is None:
-            key = jax.random.PRNGKey(0)
-        noise = mean * k_dim + std * jnp.sqrt(jnp.float32(k_dim)) * jax.random.normal(
-            key, out.shape, jnp.float32
-        )
-        # straight-through: noise perturbs forward, gradient of exact path
-        return out + jax.lax.stop_gradient(noise * scale)
-    return _approx_matmul(
+    """One engine call: the mode registry owns fakequant/inject/bitexact/
+    lowrank semantics (including the straight-through gradient rule that
+    used to be re-implemented here)."""
+    return _engine.matmul(
         x2.astype(jnp.float32),
         w.astype(jnp.float32),
         n=ap.n,
@@ -134,7 +118,7 @@ def _approx_2d(x2: jax.Array, w: jax.Array, ap: ApproxConfig, key) -> jax.Array:
         fix_to_1=ap.fix_to_1,
         mode=ap.mode,
         rank=ap.rank,
-        key=key,
+        key=_engine_modes.resolve_key(ap.mode, key),
     )
 
 

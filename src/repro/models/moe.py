@@ -20,9 +20,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import quantization
-from repro.core.approx_matmul import error_moments as _error_moments
-from repro.distributed.sharding import DP, FSDP, TP, constrain, mesh_axis_sizes
+from repro.distributed.sharding import (
+    DP, FSDP, TP, ambient_mesh, constrain, mesh_axis_sizes, shard_map,
+)
+from repro.engine import dispatch as _engine, modes as _engine_modes
 from repro.models import layers
 from repro.models.layers import Ctx
 
@@ -49,40 +50,30 @@ def init_moe(key, cfg: ModelConfig, dtype) -> dict:
 def _expert_gemm(x: jax.Array, w: jax.Array, ctx: Ctx) -> jax.Array:
     """(E, C, a) @ (E, a, b) -> (E, C, b), optionally approximated.
 
-    fakequant/inject apply directly on the batched einsum (the O(1)-overhead
-    large-scale modes); bitexact/lowrank would need a per-expert vmap of the
-    LUT path — supported for completeness but intended for small E.
+    A vmap of the engine's 2-D GEMM over experts, so mode semantics —
+    quantization, straight-through gradients, PRNG handling — are owned
+    by the registry, identical to the dense path (per-expert keys for
+    stochastic modes).  fakequant/inject stay O(1)-overhead at scale;
+    bitexact/lowrank are intended for small E.  The backend is pinned to
+    "reference" (unlike dense's "auto") because pallas_call bodies don't
+    batch under this vmap; a batched expert kernel is future work.
     """
     ap = ctx.cfg.approx
     if not ap.enabled or "moe" not in ap.targets:
         return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
-    if ap.mode == "fakequant":
-        xq = quantization.fake_quant(x.astype(jnp.float32), bits=ap.n)
-        wq = quantization.fake_quant(w.astype(jnp.float32), bits=ap.n)
-        return jnp.einsum("ecd,edf->ecf", xq, wq).astype(x.dtype)
-    if ap.mode == "inject":
-        out = jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
-        mean, std = _error_moments(ap.n, ap.t, ap.fix_to_1)
-        qx = quantization.calibrate_absmax(jax.lax.stop_gradient(x), bits=ap.n)
-        qw = quantization.calibrate_absmax(jax.lax.stop_gradient(w), bits=ap.n)
-        scale = (qx.scale * qw.scale).astype(jnp.float32)
-        k_dim = x.shape[-1]
-        key = ctx.next_key()
-        if key is None:
-            key = jax.random.PRNGKey(0)
-        noise = mean * k_dim + std * jnp.sqrt(jnp.float32(k_dim)) * jax.random.normal(
-            key, out.shape, jnp.float32
-        )
-        return (out.astype(jnp.float32) + jax.lax.stop_gradient(noise * scale)).astype(x.dtype)
-    # bitexact / lowrank: vmap the 2-D approximate GEMM over experts
-    from repro.core.approx_matmul import approx_matmul
+    spec = _engine_modes.get_mode(ap.mode)
 
-    def one(xe, we):
-        return approx_matmul(
+    def one(xe, we, ke=None):
+        return _engine.matmul(
             xe.astype(jnp.float32), we.astype(jnp.float32),
             n=ap.n, t=ap.t, fix_to_1=ap.fix_to_1, mode=ap.mode, rank=ap.rank,
+            key=ke, backend="reference",
         )
 
+    if spec.needs_key:
+        key = _engine_modes.resolve_key(ap.mode, ctx.next_key())
+        keys = jax.random.split(key, x.shape[0])
+        return jax.vmap(one)(x, w, keys).astype(x.dtype)
     return jax.vmap(one)(x, w).astype(x.dtype)
 
 
@@ -147,12 +138,11 @@ def _moe_sharded(params, x2, ctx: Ctx, mesh, sizes) -> tuple[jax.Array, jax.Arra
         gate_keep = (gate.reshape(-1)[order] * keep).astype(jnp.float32)
         return buf, dest_g, token_idx, gate_keep, aux
 
-    buf, dest_g, token_idx, gate_keep, aux = jax.shard_map(
+    buf, dest_g, token_idx, gate_keep, aux = shard_map(
         dispatch,
         mesh=mesh,
         in_specs=(P(dp_spec, None), P()),
         out_specs=(P("model", dp_spec, None), P(dp_spec), P(dp_spec), P(dp_spec), P()),
-        check_vma=False,
     )(x2, params["router"])
 
     # ---- expert FFN in pjit-auto: weights keep their (TP, FSDP) sharding
@@ -176,12 +166,11 @@ def _moe_sharded(params, x2, ctx: Ctx, mesh, sizes) -> tuple[jax.Array, jax.Arra
         out = jnp.zeros((t_loc, d), jnp.float32).at[tok].add(rows)
         return jax.lax.psum(out, "model")
 
-    out = jax.shard_map(
+    out = shard_map(
         combine,
         mesh=mesh,
         in_specs=(P("model", dp_spec, None), P(dp_spec), P(dp_spec), P(dp_spec)),
         out_specs=P(dp_spec, None),
-        check_vma=False,
     )(y, dest_g, token_idx, gate_keep)
     return out, aux
 
@@ -195,8 +184,8 @@ def moe_ffn(params: dict, x: jax.Array, ctx: Ctx) -> tuple[jax.Array, jax.Array]
     x2 = x.reshape(tokens, d)
     x2 = constrain(x2, DP, None)
 
-    mesh = jax.sharding.get_abstract_mesh()
-    sizes = mesh_axis_sizes(mesh if mesh is not None and not mesh.empty else None)
+    mesh = ambient_mesh()
+    sizes = mesh_axis_sizes(mesh)
     n_dp = 1
     for a in ("pod", "data"):
         n_dp *= sizes.get(a, 1)

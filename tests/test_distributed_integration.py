@@ -39,9 +39,9 @@ def test_moe_sharded_matches_local():
         params = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32), jnp.float32)
         out_ref, aux_ref = moe.moe_ffn(params, x, ctx)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.sharding.set_mesh(mesh):
+        from repro.distributed.sharding import make_auto_mesh, mesh_context
+        mesh = make_auto_mesh((2, 4), ("data", "model"))
+        with mesh_context(mesh):
             out_sh, aux_sh = jax.jit(lambda p, v: moe.moe_ffn(p, v, ctx))(params, x)
         np.testing.assert_allclose(np.asarray(out_sh), np.asarray(out_ref),
                                    rtol=2e-4, atol=2e-5)
@@ -66,9 +66,9 @@ def test_train_step_compiles_and_runs_on_mesh():
             d_ff=128, vocab_size=512)
         model = build_model(cfg)
         tcfg = TrainConfig(total_steps=4, grad_accum=2)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.sharding.set_mesh(mesh):
+        from repro.distributed.sharding import make_auto_mesh, mesh_context
+        mesh = make_auto_mesh((2, 4), ("data", "model"))
+        with mesh_context(mesh):
             state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
             state_sh = S.state_shardings(jax.eval_shape(lambda: state), mesh)
             state = jax.tree_util.tree_map(
@@ -98,9 +98,9 @@ def test_decode_on_mesh_with_sharded_caches():
             num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
             d_ff=128, vocab_size=256, local_window=8)
         model = build_model(cfg)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.sharding.set_mesh(mesh):
+        from repro.distributed.sharding import make_auto_mesh, mesh_context
+        mesh = make_auto_mesh((2, 4), ("data", "model"))
+        with mesh_context(mesh):
             params = model.init_params(jax.random.PRNGKey(0))
             prefill = jax.jit(make_prefill_step(model, 16))
             decode = jax.jit(make_decode_step(model), donate_argnums=1)
@@ -119,12 +119,12 @@ def test_hlo_collectives_visible_on_mesh():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.launch.hlo_analysis import analyze_hlo
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.distributed.sharding import make_auto_mesh, mesh_context
+        mesh = make_auto_mesh((2, 4), ("data", "model"))
         def f(x, w1, w2):
             h = jnp.tanh(x @ w1)
             return (h @ w2).sum()
-        with jax.sharding.set_mesh(mesh):
+        with mesh_context(mesh):
             comp = jax.jit(jax.grad(f), in_shardings=(
                 NamedSharding(mesh, P("data", None)),
                 NamedSharding(mesh, P(None, "model")),

@@ -45,7 +45,9 @@ def test_scan_multiplies_by_trip_count():
     assert ana.flops == L * 2 * 4 * d * d
     assert any(n == L for n in ana.trip_counts.values())
     # XLA's own analysis undercounts (documents why analyze_hlo exists)
-    xla = comp.cost_analysis()
+    from repro.launch.hlo_analysis import xla_cost_dict
+
+    xla = xla_cost_dict(comp)
     assert float(xla.get("flops", 0)) < ana.flops
 
 

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import quantization
+from repro.engine import artifacts
 from repro.kernels import ops, ref
 from repro.kernels.lowrank_matmul import lowrank_matmul_pallas
 from repro.kernels.lut_matmul import lut_matmul_pallas
@@ -44,7 +45,7 @@ def test_lut_matmul_kernel_sweep(m, k, nn, n, t):
     mb = jnp.asarray(rng.integers(0, 1 << n, size=(k, nn)), jnp.uint32)
     sa = jnp.asarray(rng.choice([-1.0, 1.0], size=(m, k)), jnp.float32)
     sb = jnp.asarray(rng.choice([-1.0, 1.0], size=(k, nn)), jnp.float32)
-    lut = ops._lut_dev(n, t, True)
+    lut = artifacts.product_lut_flat(n, t, True)
     got = lut_matmul_pallas(lut, ma, sa, mb, sb, n=n, interpret=True)
     want = ref.lut_matmul_ref(ma, sa.astype(jnp.int8), mb, sb.astype(jnp.int8), n=n, t=t)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

@@ -1,6 +1,14 @@
-"""Hypothesis property tests on the multiplier's invariants."""
+"""Hypothesis property tests on the multiplier's invariants.
+
+``hypothesis`` is an optional test dependency (requirements-test.txt);
+the module skips cleanly when it is absent so tier-1 collection never
+hard-errors.
+"""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import boolean_ref, error_model, seqmul
