@@ -1,0 +1,99 @@
+"""Engine GEMM latency trajectory: every registered mode × backend × shape.
+
+The run matrix is derived from the engine's own registries
+(``engine.list_modes()`` + each mode's Pallas availability), so a newly
+registered mode or kernel is benchmarked with no changes here.  Each cell
+reports warmed-up wall-time statistics (median + p95 over ``repeats``
+jitted calls) — the tracked counterpart of the paper's latency axis, and
+the series ``harness --compare`` gates speed PRs against.
+
+On CPU the Pallas backend runs in interpret mode (see
+``repro.engine.policy``): its absolute numbers are *not* TPU latencies,
+but they are comparable run-over-run, which is what the gate needs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.registry import Suite, register_suite
+from repro import engine
+
+N_BITS, T_SPLIT, RANK = 8, 4, 8
+
+FULL = {"shapes": ((128, 256, 128), (256, 256, 256)), "warmup": 2, "repeats": 10}
+REDUCED = {"shapes": ((16, 32, 16),), "warmup": 1, "repeats": 3}
+
+
+def _time_us(fn, *, warmup: int, repeats: int) -> tuple[float, float]:
+    """(median, p95) wall-time in microseconds of ``fn()`` after warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.percentile(times, 50)), float(np.percentile(times, 95))
+
+
+def _cells():
+    """(mode, backend) cells from the engine registries."""
+    for mode in engine.list_modes():
+        spec = engine.get_mode(mode)
+        yield mode, spec, "reference"
+        if spec.pallas is not None:
+            yield mode, spec, "pallas"
+
+
+def rows(reduced: bool = False) -> list:
+    cfg = REDUCED if reduced else FULL
+    key = jax.random.PRNGKey(0)
+    out = []
+    for m, k, n in cfg["shapes"]:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        for mode, spec, backend in _cells():
+            kw = dict(n=N_BITS, t=T_SPLIT, rank=RANK, mode=mode, backend=backend)
+            if spec.needs_key:
+                kw["key"] = key
+            fn = jax.jit(lambda x=x, w=w, kw=kw: engine.matmul(x, w, **kw))
+            median, p95 = _time_us(fn, warmup=cfg["warmup"], repeats=cfg["repeats"])
+            out.append({
+                "table": "engine_matmul",
+                "mode": mode,
+                "backend": backend,
+                "shape": f"{m}x{k}x{n}",
+                "M": m, "K": k, "N": n,
+                "n": N_BITS, "t": T_SPLIT, "rank": RANK,
+                "wall_us_median": round(median, 1),
+                "wall_us_p95": round(p95, 1),
+                "warmup": cfg["warmup"],
+                "repeats": cfg["repeats"],
+            })
+    return out
+
+
+register_suite(Suite(
+    name="engine_matmul",
+    rows=rows,
+    description="engine mode x backend x shape GEMM wall-times (median/p95)",
+    key_fields=("table", "mode", "backend", "shape"),
+    lower_is_better=("wall_us_median",),
+))
+
+
+if __name__ == "__main__":
+    for r in rows(reduced=True):
+        print(r)

@@ -9,27 +9,43 @@ is < 1% at that size, and the *exhaustive* rows are exact).
 
 from __future__ import annotations
 
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.registry import Suite, register_suite
 from repro.core import error_metrics, error_model
 
 EXHAUSTIVE_N = (4, 6, 8)
 MC_N = (12, 16, 32)
 MC_SAMPLES = 1 << 20
+# CI-smoke subset: exact rows stay exact, one seeded MC row keeps the
+# Monte-Carlo path covered.
+REDUCED_EXHAUSTIVE_N = (4, 6)
+REDUCED_MC_N = (12,)
+REDUCED_MC_SAMPLES = 1 << 14
 
 
-def rows():
+def rows(reduced: bool = False):
+    exhaustive_n = REDUCED_EXHAUSTIVE_N if reduced else EXHAUSTIVE_N
+    mc_n = REDUCED_MC_N if reduced else MC_N
+    mc_samples = REDUCED_MC_SAMPLES if reduced else MC_SAMPLES
     out = []
-    for n in EXHAUSTIVE_N + MC_N:
+    for n in exhaustive_n + mc_n:
         ts = sorted({2, n // 4, n // 2} & set(range(1, n)))
         for t in ts:
-            if n in EXHAUSTIVE_N:
+            if n in exhaustive_n:
                 rep = error_metrics.exhaustive_eval(n, t, fix_to_1=False)
             else:
-                rep = error_metrics.mc_eval(n, t, samples=MC_SAMPLES, fix_to_1=False)
+                rep = error_metrics.mc_eval(n, t, samples=mc_samples, fix_to_1=False)
             est = error_model.estimate(n, t, order=1)
             eq11 = error_model.mae_closed_form(n, t)
             out.append({
+                "table": "fig2_errors",
                 "n": n, "t": t,
-                "mode": "exhaustive" if rep.exhaustive else f"mc{MC_SAMPLES}",
+                "mode": "exhaustive" if rep.exhaustive else f"mc{mc_samples}",
                 "er": rep.er,
                 "mae": rep.mae,
                 "mae_eq11": eq11,
@@ -43,9 +59,14 @@ def rows():
     return out
 
 
-def main(emit) -> None:
-    for r in rows():
-        emit("fig2_errors", r)
+register_suite(Suite(
+    name="fig2_error_metrics",
+    rows=rows,
+    description="paper Fig. 2 error metrics (ER/MAE/MED/NMED/MRED) + Eq. 11/estimator",
+    key_fields=("table", "n", "t"),
+    # deterministic (exhaustive or seeded MC): any error-metric increase is real
+    lower_is_better=("er", "mae", "med_abs", "nmed", "mred"),
+))
 
 
 if __name__ == "__main__":

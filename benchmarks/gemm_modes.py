@@ -16,21 +16,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.registry import Suite, register_suite
 from repro import engine
 
 M, K, N = 128, 256, 128
+REDUCED_MKN = (32, 64, 32)
 N_BITS, T_SPLIT = 8, 4
 REPEAT = 5
 
 
-def _timed(fn, *args, **kw):
+def _timed(fn, *args, repeat=REPEAT, **kw):
     out = fn(*args, **kw)
     jax.block_until_ready(out)
     t0 = time.perf_counter()
-    for _ in range(REPEAT):
+    for _ in range(repeat):
         out = fn(*args, **kw)
     jax.block_until_ready(out)
-    return np.asarray(out), (time.perf_counter() - t0) / REPEAT * 1e6
+    return np.asarray(out), (time.perf_counter() - t0) / repeat * 1e6
 
 
 def _runs(x, w):
@@ -46,22 +54,24 @@ def _runs(x, w):
             yield f"{mode}_pallas", (lambda kw=kw: engine.matmul(x, w, backend="pallas", **kw))
 
 
-def rows():
+def rows(reduced: bool = False):
+    m, k, n = REDUCED_MKN if reduced else (M, K, N)
+    repeat = 2 if reduced else REPEAT
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
-    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
     exact = np.asarray(x @ w)
     bitexact = None
     out = []
 
     for name, fn in _runs(x, w):
-        got, us = _timed(fn)
+        got, us = _timed(fn, repeat=repeat)
         if name == "bitexact":
             bitexact = got
         rel = float(np.abs(got - exact).mean() / np.abs(exact).mean())
-        row = {"mode": name, "us_per_call_cpu": round(us, 1),
+        row = {"table": "gemm_modes", "mode": name, "us_per_call_cpu": round(us, 1),
                "rel_err_vs_exact": rel,
-               "shape": f"{M}x{K}x{N}", "n": N_BITS, "t": T_SPLIT}
+               "shape": f"{m}x{k}x{n}", "n": N_BITS, "t": T_SPLIT}
         if bitexact is not None:
             row["rel_err_vs_bitexact"] = float(
                 np.abs(got - bitexact).mean() / np.abs(exact).mean())
@@ -69,9 +79,15 @@ def rows():
     return out
 
 
-def main(emit) -> None:
-    for r in rows():
-        emit("gemm_modes", r)
+register_suite(Suite(
+    name="gemm_modes",
+    rows=rows,
+    description="per-mode GEMM accuracy vs exact + indicative CPU wall time",
+    key_fields=("table", "mode", "shape"),
+    # accuracy is deterministic per seed; wall time is indicative only, so
+    # the gated metrics here are the accuracy columns
+    lower_is_better=("rel_err_vs_exact", "rel_err_vs_bitexact"),
+))
 
 
 if __name__ == "__main__":

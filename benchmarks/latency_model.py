@@ -20,6 +20,14 @@ from __future__ import annotations
 
 import math
 
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.registry import Suite, register_suite
+
 NS = (4, 8, 16, 32, 64, 128, 256)
 T_FA = 1.0  # normalized full-adder delay
 T_MUX = 0.4  # fix-to-1 mux + D-FF setup margin
@@ -49,13 +57,15 @@ def combinatorial_area(n: int) -> float:
     return (n - 1) * (n * 8)  # n-1 adders of n bits (paper Section III)
 
 
-def rows():
+def rows(reduced: bool = False):
+    # closed-form gate models: already instantaneous, reduced is identical
     out = []
     for n in NS:
         t = n // 2
         acc = ripple_delay(n)
         app = segmented_delay(n, t)
         out.append({
+            "table": "fig3_latency_area",
             "n": n, "t": t,
             "latency_accurate": acc,
             "latency_approx": app,
@@ -71,6 +81,7 @@ def rows():
 def summary(rs):
     red = [r["latency_reduction_pct"] for r in rs]
     return {
+        "table": "fig3_summary",
         "avg_latency_reduction_pct": sum(red) / len(red),
         "max_latency_reduction_pct": max(red),
         "max_area_overhead_pct": max(r["area_overhead_pct"] for r in rs),
@@ -81,14 +92,21 @@ def summary(rs):
     }
 
 
-def main(emit) -> None:
-    rs = rows()
-    for r in rs:
-        emit("fig3_latency_area", r)
-    emit("fig3_summary", summary(rs))
+def suite_rows(reduced: bool = False):
+    rs = rows(reduced)
+    return rs + [summary(rs)]
+
+
+register_suite(Suite(
+    name="fig3_latency_area",
+    rows=suite_rows,
+    description="paper Fig. 3 latency/area trade-off (gate-delay models)",
+    key_fields=("table", "n", "t"),
+    lower_is_better=("latency_approx", "area_overhead_pct"),
+    higher_is_better=("latency_reduction_pct", "avg_latency_reduction_pct"),
+))
 
 
 if __name__ == "__main__":
-    for r in rows():
+    for r in suite_rows():
         print(r)
-    print(summary(rows()))

@@ -1,0 +1,89 @@
+"""Benchmark-suite registry: the one list of what can be measured.
+
+Every module under ``benchmarks/`` that defines a suite registers it here
+at import time (mirroring ``repro.engine``'s mode registry), and
+:func:`discover` imports the whole package so the set of suites is derived
+from the filesystem — ``benchmarks.run`` and ``benchmarks.harness`` both
+iterate this registry, so a new suite cannot exist in one driver but not
+the other.
+
+A :class:`Suite` carries, besides its row producer, the *gating metadata*
+consumed by ``harness --compare``: which row fields identify a row across
+runs (``key_fields``) and which metrics regress by going up
+(``lower_is_better``) or down (``higher_is_better``).  The metadata is
+embedded verbatim in the emitted ``BENCH_<suite>.json`` so external tools
+can gate without importing this package.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import pkgutil
+from typing import Callable
+
+__all__ = ["Suite", "register_suite", "get_suite", "list_suites", "discover"]
+
+# package-infrastructure modules that do not define suites
+_SKIP = {"harness", "registry", "run"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Suite:
+    """One registered benchmark suite.
+
+    ``rows(reduced=False)`` returns a list of flat dicts; every row must
+    carry a ``"table"`` key (one suite may emit several paper tables, e.g.
+    ``fig3_latency_area`` + ``fig3_summary``).  ``reduced=True`` shrinks
+    shapes/samples to CI-smoke size without changing the schema.
+    """
+
+    name: str
+    rows: Callable[..., list]
+    description: str = ""
+    key_fields: tuple = ("table",)
+    lower_is_better: tuple = ()
+    higher_is_better: tuple = ()
+
+    def gating(self) -> dict:
+        return {
+            "key_fields": list(self.key_fields),
+            "lower_is_better": list(self.lower_is_better),
+            "higher_is_better": list(self.higher_is_better),
+        }
+
+
+_REGISTRY: dict[str, Suite] = {}
+
+
+def register_suite(suite: Suite) -> Suite:
+    if suite.name in _REGISTRY:
+        raise ValueError(f"suite {suite.name!r} is already registered")
+    _REGISTRY[suite.name] = suite
+    return suite
+
+
+def get_suite(name: str) -> Suite:
+    discover()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown suite {name!r}; registered suites: {list_suites()}"
+        ) from None
+
+
+def list_suites() -> list[str]:
+    discover()
+    return sorted(_REGISTRY)
+
+
+def discover() -> dict[str, Suite]:
+    """Import every suite module in the package; return the registry."""
+    import benchmarks  # namespace package — resolves from PYTHONPATH/cwd
+
+    for info in pkgutil.iter_modules(benchmarks.__path__):
+        if info.name in _SKIP or info.name.startswith("_"):
+            continue
+        importlib.import_module(f"benchmarks.{info.name}")
+    return dict(_REGISTRY)

@@ -16,6 +16,13 @@ from __future__ import annotations
 import json
 import os
 
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.registry import Suite, register_suite
 from repro.configs.base import SHAPES
 from repro.configs.registry import get_config
 from repro.launch.mesh import HW
@@ -97,13 +104,26 @@ def report(recs, *, with_flash=True):
     return out
 
 
-def main(emit) -> None:
+def rows(reduced: bool = False):
+    # pure post-processing of dry-run records: reduced is identical; empty
+    # when no results/dryrun_*.jsonl have been produced in this checkout
+    out = []
     for tag, path in (("baseline", BASELINE), ("optimized", PERF)):
         for row in report(load(path)):
-            emit(f"roofline_{tag}", row)
+            out.append({"table": f"roofline_{tag}", **row})
+    return out
+
+
+register_suite(Suite(
+    name="roofline",
+    rows=rows,
+    description="roofline terms per (arch x shape x mesh) from dry-run JSONL",
+    key_fields=("table", "arch", "shape", "mesh"),
+    lower_is_better=("bound_s", "memory_s"),
+    higher_is_better=("roofline_pct",),
+))
 
 
 if __name__ == "__main__":
-    for tag, path in (("baseline", BASELINE), ("optimized", PERF)):
-        for row in report(load(path)):
-            print(tag, row)
+    for r in rows():
+        print(r)

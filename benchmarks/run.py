@@ -1,10 +1,15 @@
-"""Benchmark driver: one module per paper table/figure.
+"""CSV-ish benchmark driver — a thin shim over ``benchmarks.harness``.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run            # all suites
   PYTHONPATH=src python -m benchmarks.run fig2       # substring filter
+  PYTHONPATH=src python -m benchmarks.run --reduced  # CI-smoke shapes
 
-Emits ``table,key=value,...`` CSV-ish lines (one per row) so the output
-diffs cleanly across runs.
+Emits ``table,key=value,...`` lines (one per row) so the output diffs
+cleanly across runs.  The suite list is derived from the harness registry
+(``benchmarks.registry``) — registering a suite there is the *only* step;
+this driver and the JSON-emitting ``benchmarks.harness`` always agree.
+For machine-readable ``BENCH_<suite>.json`` artifacts and ``--compare``
+regression gating, use ``python -m benchmarks.harness`` instead.
 """
 
 from __future__ import annotations
@@ -12,14 +17,18 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import error_tables, gemm_modes, latency_model, roofline_report
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
 
-MODULES = [
-    ("fig2_error_metrics", error_tables.main),
-    ("fig3_latency_area", latency_model.main),
-    ("gemm_modes", gemm_modes.main),
-    ("roofline", roofline_report.main),
-]
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import registry
+
+
+def modules() -> list:
+    """(name, rows_fn) pairs, straight from the suite registry."""
+    return [(name, suite.rows) for name, suite in sorted(registry.discover().items())]
 
 
 def emit(table: str, row: dict) -> None:
@@ -32,15 +41,20 @@ def emit(table: str, row: dict) -> None:
 
 
 def main() -> None:
-    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    argv = sys.argv[1:]
+    reduced = "--reduced" in argv
+    argv = [a for a in argv if a != "--reduced"]
+    pattern = argv[0] if argv else ""
     failures = 0
-    for name, fn in MODULES:
+    for name, rows_fn in modules():
         if pattern and pattern not in name:
             continue
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
         try:
-            fn(emit)
+            for row in rows_fn(reduced=reduced):
+                row = dict(row)
+                emit(row.pop("table"), row)
         except Exception as e:  # noqa: BLE001 — report all benches
             failures += 1
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)

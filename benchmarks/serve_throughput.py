@@ -1,0 +1,82 @@
+"""Serving throughput: the prefill+decode request loop as a tracked metric.
+
+Drives :func:`repro.launch.serve.serve_loop` (the importable request loop
+behind ``python -m repro.launch.serve``) on a reduced-family config and
+reports tokens/sec, requests/sec, and the per-batch retire latency
+distribution — the serving-path counterpart of the paper's latency axis.
+
+The model is always the ``reduced()`` smoke config (full checkpoints are
+not servable in this container); ``reduced=True`` additionally shrinks the
+request mix to CI-smoke size.  Greedy decoding with a fixed seed, so the
+token stream — though not the wall times — is deterministic.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.registry import Suite, register_suite
+
+FULL = {"requests": 12, "batch_size": 4, "prompt_len": 16, "gen": 8}
+REDUCED = {"requests": 4, "batch_size": 2, "prompt_len": 8, "gen": 4}
+
+ARCHS = ("qwen3-0.6b",)
+APPROX = (None, "lowrank")  # exact serving + one approximate mode
+
+
+def rows(reduced: bool = False) -> list:
+    from repro.configs.registry import apply_approx, get_config
+    from repro.launch.serve import serve_loop
+    from repro.models.registry import build_model
+
+    cfg_run = REDUCED if reduced else FULL
+    out = []
+    for arch in ARCHS:
+        for mode in APPROX:
+            cfg = get_config(arch).reduced()
+            if mode is not None:
+                cfg = apply_approx(cfg, mode=mode)
+            model = build_model(cfg)
+            params = model.init_params(jax.random.PRNGKey(0))
+            stats = serve_loop(model, params, seed=0, **cfg_run)
+            lats = list(stats.batch_latencies_s)
+            out.append({
+                "table": "serve_throughput",
+                "arch": arch,
+                "approx_mode": mode or "none",
+                **cfg_run,
+                "requests_served": stats.requests,
+                "tokens_out": stats.tokens_out,
+                "wall_s": round(stats.wall_s, 4),
+                "prefill_s": round(stats.prefill_s, 4),
+                "decode_s": round(stats.decode_s, 4),
+                "tokens_per_s": round(stats.tokens_per_s, 2),
+                "requests_per_s": round(stats.requests_per_s, 2),
+                "batches": len(lats),
+                "batch_retire_s_median": round(float(np.percentile(lats, 50)), 4),
+                "batch_retire_s_p95": round(float(np.percentile(lats, 95)), 4),
+                "devices": stats.devices,
+            })
+    return out
+
+
+register_suite(Suite(
+    name="serve_throughput",
+    rows=rows,
+    description="prefill+decode request-loop tokens/sec and batch-retire latency",
+    key_fields=("table", "arch", "approx_mode", "batch_size", "prompt_len", "gen"),
+    lower_is_better=("batch_retire_s_median",),
+    higher_is_better=("tokens_per_s",),
+))
+
+
+if __name__ == "__main__":
+    for r in rows(reduced=True):
+        print(r)

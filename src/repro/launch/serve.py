@@ -6,6 +6,11 @@ together, and finished rows are retired (replaced from the queue) at
 re-batch boundaries.  Demonstrates the serve_step path the decode dry-run
 cells lower, on a reduced config on CPU.
 
+The request loop itself is the importable :func:`serve_loop`, which
+returns a :class:`ServeStats` instead of printing — the
+``serve_throughput`` benchmark suite drives it directly; this module's
+``main`` is the CLI wrapper.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --batch 4 --gen 32
 """
@@ -13,6 +18,7 @@ cells lower, on a reduced config on CPU.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -23,6 +29,108 @@ from repro.configs.registry import apply_approx, get_config
 from repro.engine import modes as engine_modes
 from repro.models.registry import build_model
 from repro.train.steps import make_decode_step, make_prefill_step
+
+__all__ = ["ServeStats", "serve_loop", "main"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """What one serve run measured (all wall times in seconds)."""
+
+    requests: int
+    tokens_out: int
+    wall_s: float
+    prefill_s: float  # total time in prefill across batches
+    decode_s: float  # total time in the decode loops
+    batch_latencies_s: tuple  # per-batch wall time, prefill through retire
+    devices: int
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.requests / self.wall_s if self.wall_s > 0 else 0.0
+
+    def summary(self) -> str:
+        return (
+            f"served {self.requests} requests, {self.tokens_out} tokens in "
+            f"{self.wall_s:.2f}s ({self.tokens_per_s:.1f} tok/s on "
+            f"{self.devices} device(s))"
+        )
+
+
+def serve_loop(
+    model,
+    params,
+    *,
+    requests: int = 16,
+    batch_size: int = 4,
+    prompt_len: int = 32,
+    gen: int = 32,
+    seed: int = 0,
+) -> ServeStats:
+    """Run the static-batch prefill+decode loop; return its stats.
+
+    Builds (and jits) the prefill/decode pair for ``prompt_len + gen``,
+    synthesizes ``requests`` random prompts of varying length, serves them
+    in batches of ``batch_size``, and times every stage.  Greedy decoding;
+    deterministic for a fixed ``seed``.
+    """
+    cfg = model.cfg
+    max_seq = prompt_len + gen
+    mem_len = prompt_len if cfg.is_encdec else 0
+    prefill = jax.jit(make_prefill_step(model, max_seq, mem_len=mem_len))
+    decode = jax.jit(make_decode_step(model), donate_argnums=1)
+
+    rng = np.random.default_rng(seed)
+    queue = [
+        rng.integers(0, cfg.vocab_size, size=rng.integers(4, prompt_len + 1))
+        for _ in range(requests)
+    ]
+    done = 0
+    tokens_out = 0
+    prefill_s = 0.0
+    decode_s = 0.0
+    batch_latencies: list[float] = []
+    t0 = time.perf_counter()
+    while queue:
+        t_batch = time.perf_counter()
+        batch_reqs = [queue.pop(0) for _ in range(min(batch_size, len(queue)))]
+        b = len(batch_reqs)
+        toks = np.zeros((b, prompt_len), np.int32)
+        for i, r in enumerate(batch_reqs):
+            toks[i, -len(r):] = r  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.is_encdec:
+            batch["src_embeds"] = jnp.asarray(
+                rng.standard_normal((b, prompt_len, cfg.d_model)), jnp.float32
+            )
+            batch["src_pos"] = jnp.arange(prompt_len, dtype=jnp.int32)[None].repeat(b, 0)
+        caches, logits = prefill(params, batch)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter()
+        prefill_s += t_prefill - t_batch
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        for g in range(gen):
+            logits, caches = decode(params, caches, tok, jnp.int32(prompt_len + g))
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            tokens_out += b
+        jax.block_until_ready(tok)
+        decode_s += time.perf_counter() - t_prefill
+        batch_latencies.append(time.perf_counter() - t_batch)
+        done += b
+    wall = time.perf_counter() - t0
+    return ServeStats(
+        requests=done,
+        tokens_out=tokens_out,
+        wall_s=wall,
+        prefill_s=prefill_s,
+        decode_s=decode_s,
+        batch_latencies_s=tuple(batch_latencies),
+        devices=len(jax.devices()),
+    )
 
 
 def main() -> None:
@@ -45,41 +153,16 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(args.seed))
 
-    max_seq = args.prompt_len + args.gen
-    mem_len = args.prompt_len if cfg.is_encdec else 0
-    prefill = jax.jit(make_prefill_step(model, max_seq, mem_len=mem_len))
-    decode = jax.jit(make_decode_step(model), donate_argnums=1)
-
-    rng = np.random.default_rng(args.seed)
-    queue = [
-        rng.integers(0, cfg.vocab_size, size=rng.integers(4, args.prompt_len + 1))
-        for _ in range(args.requests)
-    ]
-    done = 0
-    tokens_out = 0
-    t0 = time.perf_counter()
-    while queue:
-        batch_reqs = [queue.pop(0) for _ in range(min(args.batch, len(queue)))]
-        b = len(batch_reqs)
-        toks = np.zeros((b, args.prompt_len), np.int32)
-        for i, r in enumerate(batch_reqs):
-            toks[i, -len(r):] = r  # left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        if cfg.is_encdec:
-            batch["src_embeds"] = jnp.asarray(
-                rng.standard_normal((b, args.prompt_len, cfg.d_model)), jnp.float32
-            )
-            batch["src_pos"] = jnp.arange(args.prompt_len, dtype=jnp.int32)[None].repeat(b, 0)
-        caches, logits = prefill(params, batch)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        for g in range(args.gen):
-            logits, caches = decode(params, caches, tok, jnp.int32(args.prompt_len + g))
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            tokens_out += b
-        done += b
-    dt = time.perf_counter() - t0
-    print(f"served {done} requests, {tokens_out} tokens in {dt:.2f}s "
-          f"({tokens_out/dt:.1f} tok/s on {len(jax.devices())} device(s))")
+    stats = serve_loop(
+        model,
+        params,
+        requests=args.requests,
+        batch_size=args.batch,
+        prompt_len=args.prompt_len,
+        gen=args.gen,
+        seed=args.seed,
+    )
+    print(stats.summary())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,153 @@
+"""Benchmark harness: registry discovery, BENCH_*.json schema, --compare gating.
+
+Uses the ``fig3_latency_area`` suite throughout — closed-form gate-delay
+models, so rows are deterministic and instantaneous, which lets the
+compare tests assert exact regression/no-regression outcomes.
+"""
+
+import copy
+import json
+
+import pytest
+
+from benchmarks import harness, registry
+
+SUITE = "fig3_latency_area"
+EXPECTED_SUITES = {
+    "engine_matmul",
+    "fig2_error_metrics",
+    "fig3_latency_area",
+    "gemm_modes",
+    "roofline",
+    "serve_throughput",
+}
+
+
+@pytest.fixture(scope="module")
+def doc():
+    return harness.run_suite(registry.get_suite(SUITE), reduced=True)
+
+
+def test_registry_discovers_all_suites():
+    assert set(registry.discover()) == EXPECTED_SUITES
+
+
+def test_run_shim_derives_from_registry():
+    from benchmarks import run
+
+    assert {name for name, _ in run.modules()} == set(registry.discover())
+
+
+def test_unknown_suite_lists_valid_names():
+    with pytest.raises(ValueError, match="engine_matmul"):
+        registry.get_suite("nope")
+
+
+def test_emitted_json_is_schema_valid(doc, tmp_path):
+    path = harness.write_doc(doc, str(tmp_path))
+    assert path.endswith(f"BENCH_{SUITE}.json")
+    loaded = harness.load_doc(path)  # load_doc validates
+    assert loaded["suite"] == SUITE
+    assert loaded["schema_version"] == harness.SCHEMA_VERSION
+    assert loaded["reduced"] is True
+    assert loaded["row_count"] == len(loaded["rows"]) > 0
+    assert loaded["git_sha"]
+    for key in ("python", "jax", "numpy", "jax_backend", "device_count", "platform"):
+        assert key in loaded["env"]
+    assert loaded["gating"]["key_fields"] == ["table", "n", "t"]
+    assert all("table" in row for row in loaded["rows"])
+
+
+def test_validate_doc_rejects_malformed(doc):
+    with pytest.raises(ValueError, match="missing key"):
+        harness.validate_doc({})
+    bad = copy.deepcopy(doc)
+    bad["schema_version"] = 99
+    with pytest.raises(ValueError, match="schema_version"):
+        harness.validate_doc(bad)
+    bad = copy.deepcopy(doc)
+    bad["row_count"] += 1
+    with pytest.raises(ValueError, match="row_count"):
+        harness.validate_doc(bad)
+    bad = copy.deepcopy(doc)
+    del bad["rows"][0]["table"]
+    with pytest.raises(ValueError, match="'table'"):
+        harness.validate_doc(bad)
+
+
+def test_compare_identical_runs_has_no_regressions(doc):
+    assert harness.compare_docs(doc, copy.deepcopy(doc)) == []
+
+
+def test_compare_flags_doctored_faster_baseline(doc):
+    baseline = copy.deepcopy(doc)
+    for row in baseline["rows"]:
+        if "latency_approx" in row:  # lower-is-better: baseline was "faster"
+            row["latency_approx"] *= 0.5
+        if "avg_latency_reduction_pct" in row:  # higher-is-better: baseline "won more"
+            row["avg_latency_reduction_pct"] *= 2.0
+    regs = harness.compare_docs(doc, baseline, threshold=0.25)
+    assert regs
+    assert {r.direction for r in regs} == {"lower_is_better", "higher_is_better"}
+    assert all(r.rel_change > 0.25 for r in regs)
+
+
+def test_compare_within_threshold_passes(doc):
+    baseline = copy.deepcopy(doc)
+    for row in baseline["rows"]:
+        if "latency_approx" in row:
+            row["latency_approx"] *= 0.9  # 11% worse now: under the 25% gate
+    assert harness.compare_docs(doc, baseline, threshold=0.25) == []
+
+
+def test_compare_rejects_mismatched_runs(doc):
+    other = copy.deepcopy(doc)
+    other["suite"] = "engine_matmul"
+    with pytest.raises(ValueError, match="cannot compare suite"):
+        harness.compare_docs(doc, other)
+    other = copy.deepcopy(doc)
+    other["reduced"] = False
+    with pytest.raises(ValueError, match="reduced"):
+        harness.compare_docs(doc, other)
+
+
+def test_new_rows_are_not_regressions(doc):
+    baseline = copy.deepcopy(doc)
+    baseline["rows"] = baseline["rows"][:1]
+    baseline["row_count"] = 1
+    assert harness.compare_docs(doc, baseline) == []
+
+
+def test_vanished_rows_are_regressions(doc):
+    current = copy.deepcopy(doc)
+    current["rows"] = current["rows"][:-1]
+    current["row_count"] -= 1
+    regs = harness.compare_docs(current, doc)
+    assert len(regs) == 1
+    assert regs[0].direction == "missing_row"
+    assert regs[0].metric == "row_present"
+
+
+def test_cli_run_write_and_gate(doc, tmp_path):
+    out = tmp_path / "out"
+    out.mkdir()
+    clean = tmp_path / "BENCH_clean.json"
+    clean.write_text(json.dumps(doc, default=float))
+    rc = harness.main([
+        "--suite", SUITE, "--reduced", "--out-dir", str(out),
+        "--compare", str(clean),
+    ])
+    assert rc == 0
+    assert (out / f"BENCH_{SUITE}.json").exists()
+
+    doctored = copy.deepcopy(doc)
+    for row in doctored["rows"]:
+        if "latency_approx" in row:
+            row["latency_approx"] *= 0.5
+    bad = tmp_path / "BENCH_doctored.json"
+    bad.write_text(json.dumps(doctored, default=float))
+    rc = harness.main([
+        "--suite", SUITE, "--reduced", "--out-dir", str(out),
+        "--compare", str(bad),
+    ])
+    assert rc == 1
