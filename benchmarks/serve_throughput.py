@@ -1,20 +1,32 @@
-"""Serving throughput: the prefill+decode request loop as a tracked metric.
+"""Serving throughput: static-batch loop vs continuous-batching scheduler.
 
-Drives :func:`repro.launch.serve.serve_loop` (the importable request loop
-behind ``python -m repro.launch.serve``) on a reduced-family config and
-reports tokens/sec, requests/sec, and the per-batch retire latency
-distribution — the serving-path counterpart of the paper's latency axis.
+Runs the same mixed-length / mixed-budget request queue (one
+``repro.serve.synth_requests`` draw per config, so both schedulers see
+an identical workload) through both serve loops and reports, per row:
 
-The model is always the ``reduced()`` smoke config (full checkpoints are
-not servable in this container); ``reduced=True`` additionally shrinks the
-request mix to CI-smoke size.  Greedy decoding with a fixed seed, so the
-token stream — though not the wall times — is deterministic.
+* ``tokens_per_s`` / ``requests_per_s`` — useful (budget/EOS-bounded)
+  tokens only, so the two schedulers are directly comparable;
+* ``slot_utilization`` — mean fraction of live rows per decode step
+  (the static loop's dead decode steps show up here);
+* ``ttft_s_p50`` / ``ttft_s_p95`` — time-to-first-token distribution;
+* ``request_latency_s_p50`` / ``_p95`` — end-to-end per-request latency;
+* ``speedup_vs_static`` (continuous rows) — the retirement win the
+  acceptance gate reads.
+
+Both loops warm their jitted steps before the timed region (so the
+numbers measure scheduling, not compilation) and each scheduler is run
+``REPEATS`` times on the same queue with the fastest run kept —
+single-run wall times at these scales are dominated by scheduler-
+independent host noise.  The model is always the ``reduced()`` smoke
+config (full checkpoints are not servable in this container);
+``reduced=True`` additionally shrinks the request mix to CI-smoke size.
+Greedy decoding with a fixed seed: the token streams — though not the
+wall times — are deterministic.
 """
 
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
     import os
@@ -24,17 +36,49 @@ if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
 
 from benchmarks.registry import Suite, register_suite
 
-FULL = {"requests": 12, "batch_size": 4, "prompt_len": 16, "gen": 8}
-REDUCED = {"requests": 4, "batch_size": 2, "prompt_len": 8, "gen": 4}
+FULL = {"requests": 16, "batch_size": 4, "prompt_len": 16, "gen": 8}
+REDUCED = {"requests": 10, "batch_size": 2, "prompt_len": 8, "gen": 6}
+REPEATS = 3
 
 ARCHS = ("qwen3-0.6b",)
 APPROX = (None, "lowrank")  # exact serving + one approximate mode
 
 
+def _row(arch, mode, cfg_run, result, *, speedup=None) -> dict:
+    from repro.serve.stats import percentile
+
+    stats = result.stats
+    row = {
+        "table": "serve_throughput",
+        "arch": arch,
+        "approx_mode": mode or "none",
+        "scheduler": stats.scheduler,
+        "repeats_best_of": REPEATS,
+        **cfg_run,
+        "requests_served": stats.requests,
+        "tokens_out": stats.tokens_out,
+        "wall_s": round(stats.wall_s, 4),
+        "prefill_s": round(stats.prefill_s, 4),
+        "decode_s": round(stats.decode_s, 4),
+        "tokens_per_s": round(stats.tokens_per_s, 2),
+        "requests_per_s": round(stats.requests_per_s, 2),
+        "decode_steps": stats.decode_steps,
+        "slot_utilization": round(stats.slot_utilization, 4),
+        "ttft_s_p50": round(percentile(stats.ttft_s, 50), 4),
+        "ttft_s_p95": round(percentile(stats.ttft_s, 95), 4),
+        "request_latency_s_p50": round(percentile(stats.request_latencies_s, 50), 4),
+        "request_latency_s_p95": round(percentile(stats.request_latencies_s, 95), 4),
+        "devices": stats.devices,
+    }
+    if speedup is not None:
+        row["speedup_vs_static"] = round(speedup, 3)
+    return row
+
+
 def rows(reduced: bool = False) -> list:
     from repro.configs.registry import apply_approx, get_config
-    from repro.launch.serve import serve_loop
     from repro.models.registry import build_model
+    from repro.serve import ContinuousScheduler, static_serve_loop, synth_requests
 
     cfg_run = REDUCED if reduced else FULL
     out = []
@@ -45,35 +89,46 @@ def rows(reduced: bool = False) -> list:
                 cfg = apply_approx(cfg, mode=mode)
             model = build_model(cfg)
             params = model.init_params(jax.random.PRNGKey(0))
-            stats = serve_loop(model, params, seed=0, **cfg_run)
-            lats = list(stats.batch_latencies_s)
-            out.append({
-                "table": "serve_throughput",
-                "arch": arch,
-                "approx_mode": mode or "none",
-                **cfg_run,
-                "requests_served": stats.requests,
-                "tokens_out": stats.tokens_out,
-                "wall_s": round(stats.wall_s, 4),
-                "prefill_s": round(stats.prefill_s, 4),
-                "decode_s": round(stats.decode_s, 4),
-                "tokens_per_s": round(stats.tokens_per_s, 2),
-                "requests_per_s": round(stats.requests_per_s, 2),
-                "batches": len(lats),
-                "batch_retire_s_median": round(float(np.percentile(lats, 50)), 4),
-                "batch_retire_s_p95": round(float(np.percentile(lats, 95)), 4),
-                "devices": stats.devices,
-            })
+            queue = synth_requests(
+                cfg_run["requests"], prompt_len=cfg_run["prompt_len"],
+                gen=cfg_run["gen"], vocab_size=cfg.vocab_size, seed=0,
+            )
+            static = min(
+                (static_serve_loop(
+                    model, params, queue,
+                    batch_size=cfg_run["batch_size"],
+                    prompt_len=cfg_run["prompt_len"],
+                    gen=cfg_run["gen"], seed=0,
+                ) for _ in range(REPEATS)),
+                key=lambda r: r.stats.wall_s,
+            )
+            sched = ContinuousScheduler(
+                model, params,
+                batch_size=cfg_run["batch_size"], prompt_len=cfg_run["prompt_len"],
+                max_new=cfg_run["gen"],
+            )
+            cont = min(
+                (sched.run(queue, warmup=(i == 0)) for i in range(REPEATS)),
+                key=lambda r: r.stats.wall_s,
+            )
+            speedup = (
+                cont.stats.tokens_per_s / static.stats.tokens_per_s
+                if static.stats.tokens_per_s > 0 else 0.0
+            )
+            out.append(_row(arch, mode, cfg_run, static))
+            out.append(_row(arch, mode, cfg_run, cont, speedup=speedup))
     return out
 
 
 register_suite(Suite(
     name="serve_throughput",
     rows=rows,
-    description="prefill+decode request-loop tokens/sec and batch-retire latency",
-    key_fields=("table", "arch", "approx_mode", "batch_size", "prompt_len", "gen"),
-    lower_is_better=("batch_retire_s_median",),
-    higher_is_better=("tokens_per_s",),
+    description="static vs continuous serving: tokens/sec, slot utilization, "
+                "TTFT and per-request latency percentiles",
+    key_fields=("table", "arch", "approx_mode", "scheduler", "batch_size",
+                "prompt_len", "gen"),
+    lower_is_better=("request_latency_s_p50",),
+    higher_is_better=("tokens_per_s", "slot_utilization"),
 ))
 
 

@@ -27,7 +27,8 @@ FSDP = "data"
 
 __all__ = [
     "DP", "TP", "FSDP", "ambient_mesh", "mesh_context", "make_auto_mesh",
-    "shard_map", "constrain", "param_spec", "param_specs", "mesh_axis_sizes",
+    "data_parallel_mesh", "shard_map", "constrain", "param_spec",
+    "param_specs", "mesh_axis_sizes",
 ]
 
 
@@ -78,6 +79,29 @@ def make_auto_mesh(shape: tuple, axes: tuple):
     if axis_type is not None:
         return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
     return jax.make_mesh(shape, axes)
+
+
+def data_parallel_mesh(batch_size: Optional[int] = None, *, devices=None):
+    """A 1-D ``("data",)`` serving mesh over the available devices, or None.
+
+    Picks the largest device count that divides ``batch_size`` (all of
+    them when ``batch_size`` is None), so installing the result around a
+    decode loop shards the request batch over data via the model's
+    ambient ``constrain`` rules.  Returns None on a single device (or
+    when nothing divides) — serving then runs unsharded, no mesh context
+    needed.  This is the ``distributed`` half of the continuous-batching
+    scheduler's optional data-parallel decode (docs/serving.md).
+    """
+    devs = list(devices if devices is not None else jax.devices())
+    n = len(devs)
+    if batch_size is not None:
+        while n > 1 and batch_size % n:
+            n -= 1
+    if n <= 1:
+        return None
+    import numpy as np
+
+    return jax.sharding.Mesh(np.array(devs[:n]), ("data",))
 
 
 def shard_map(f, *, mesh, in_specs, out_specs):

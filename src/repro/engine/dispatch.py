@@ -13,16 +13,19 @@ Backends
 --------
 ``reference``  pure-jnp bodies (compile everywhere; the oracle).
 ``pallas``     tiled VMEM-resident kernels (native on TPU, interpret mode
-               elsewhere per ``policy.use_interpret``).  Modes without a
-               Pallas body fall back to their reference body.
+               elsewhere per ``policy.use_interpret``).  Explicitly
+               requesting ``pallas`` for a mode with no Pallas body is a
+               ``ValueError`` — no silent reference fallback.
 ``auto``       ``pallas`` when a Pallas body exists and the policy says
-               native lowering is available, else ``reference``.
+               native lowering is available, else ``reference`` (the one
+               documented fallback).
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import seqmul as _seqmul
 from repro.engine import modes as _modes
@@ -34,20 +37,41 @@ BACKENDS = ("auto", "reference", "pallas")
 
 
 def resolve_backend(backend: str, spec: _modes.ModeSpec | None = None) -> str:
-    """Map ``auto`` onto a concrete backend; reject unknown names."""
+    """Map ``auto`` onto a concrete backend; reject unknown names and an
+    explicit ``pallas`` request for a mode with no Pallas body (only
+    ``auto`` may fall back to the reference body)."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; valid backends: {list(BACKENDS)}")
+    if backend == "pallas" and spec is not None and spec.pallas is None:
+        raise ValueError(
+            f"mode {spec.name!r} has no Pallas body; backend='pallas' was requested "
+            f"explicitly (use backend='auto' for the documented reference fallback)"
+        )
     if backend != "auto":
         return backend
     has_pallas = spec is None or spec.pallas is not None
     return "pallas" if (has_pallas and not use_interpret()) else "reference"
 
 
+def _zero_cotangent(e):
+    """A zero cotangent matching ``e``'s *tangent* type.
+
+    Inexact primals get a zero of their own dtype; integer/bool primals
+    (e.g. an int32 LUT in a mode's ``extra``) have tangent type
+    ``float0``, and handing ``custom_vjp`` an int-dtyped zero instead
+    crashes under ``jax.grad``.
+    """
+    if jnp.issubdtype(jnp.result_type(e), jnp.inexact):
+        return jnp.zeros_like(e)
+    return np.zeros(jnp.shape(e), jax.dtypes.float0)
+
+
 def _straight_through(impl, p, x, w, extra):
     """Forward ``impl(x, w, p, *extra)``; backward = exact-matmul grads.
 
-    ``extra`` must be f32 arrays (they receive zero cotangents) and is
-    passed explicitly because ``custom_vjp`` cannot close over tracers.
+    ``extra`` (any dtypes; every leaf receives a zero cotangent of its
+    tangent type) is passed explicitly because ``custom_vjp`` cannot
+    close over tracers.
     """
 
     @jax.custom_vjp
@@ -59,7 +83,8 @@ def _straight_through(impl, p, x, w, extra):
 
     def bwd(res, g):
         x, w, extra = res
-        return (g @ w.T, x.T @ g, jax.tree_util.tree_map(jnp.zeros_like, extra))
+        g = g.astype(jnp.float32)
+        return (g @ w.T, x.T @ g, jax.tree_util.tree_map(_zero_cotangent, extra))
 
     f.defvjp(fwd, bwd)
     return f(x, w, extra)
@@ -80,8 +105,9 @@ def matmul(
     """Approximate GEMM: x (M, K) @ w (K, N) -> (M, N) f32.
 
     Raises ``ValueError`` (listing the valid names) for an unknown
-    ``mode`` or ``backend``, and when a stochastic mode is called
-    without a PRNG ``key``.
+    ``mode`` or ``backend``, for an explicit ``backend="pallas"`` on a
+    mode with no Pallas body (only ``auto`` falls back to reference),
+    and when a stochastic mode is called without a PRNG ``key``.
     """
     spec = _modes.get_mode(mode)
     resolved = resolve_backend(backend, spec)
@@ -91,7 +117,7 @@ def matmul(
     w = jnp.asarray(w, jnp.float32)
     p = _modes.GemmParams(n=n, t=t, fix_to_1=fix_to_1, rank=rank)
     extra = spec.prepare(x, w, p, key) if spec.prepare is not None else ()
-    impl = spec.pallas if (resolved == "pallas" and spec.pallas is not None) else spec.reference
+    impl = spec.pallas if resolved == "pallas" else spec.reference
     if spec.differentiable:
         return impl(x, w, p, *extra)
     return _straight_through(impl, p, x, w, tuple(extra))

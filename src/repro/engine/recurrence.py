@@ -26,10 +26,16 @@ MAX_N = 32
 
 
 def validate_nt(n: int, t: int) -> None:
+    """Accept 1 <= n <= MAX_N with 1 <= t <= n-1 — except n=1, where the
+    split is degenerate (no MSP to segment; ``1 <= t <= n-1`` is
+    unsatisfiable) and t=1 is accepted: the single-cycle product never
+    produces an LSP carry, so exact and approximate coincide and the
+    result is independent of t."""
     if not (1 <= n <= MAX_N):
         raise ValueError(f"bit-width n={n} out of supported range [1, {MAX_N}]")
-    if not (1 <= t <= n - 1):
-        raise ValueError(f"splitting point t={t} must satisfy 1 <= t <= n-1={n - 1}")
+    if not (1 <= t <= max(1, n - 1)):
+        bound = "t == 1 (degenerate split)" if n == 1 else f"1 <= t <= n-1={n - 1}"
+        raise ValueError(f"splitting point t={t} for n={n} must satisfy {bound}")
 
 
 def seqmul_recurrence(

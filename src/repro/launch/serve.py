@@ -1,64 +1,41 @@
-"""Batched serving driver: prefill + decode loop over a request queue.
+"""Serving CLI: thin driver over the ``repro.serve`` subsystem.
 
-A static-batch continuous-batching-lite scheduler: requests arrive with
-different prompt lengths, are padded into the prefill batch, decoded
-together, and finished rows are retired (replaced from the queue) at
-re-batch boundaries.  Demonstrates the serve_step path the decode dry-run
-cells lower, on a reduced config on CPU.
-
-The request loop itself is the importable :func:`serve_loop`, which
-returns a :class:`ServeStats` instead of printing — the
-``serve_throughput`` benchmark suite drives it directly; this module's
-``main`` is the CLI wrapper.
+The request loop itself lives in ``repro.serve`` (docs/serving.md): a
+continuous-batching scheduler with slot-based KV-cache admission —
+finished rows are retired and queued requests admitted *per decode step*
+(single-row prefill scattered into the freed slot; surviving rows are
+never re-prefilled), with per-row position vectors so left-padded short
+prompts decode at their true positions.  ``--scheduler static`` selects
+the legacy static-batch loop (the measured baseline).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --batch 4 --gen 32
+
+``serve_loop`` and ``ServeStats`` stay importable here for backward
+compatibility; ``serve_loop`` now delegates to
+:func:`repro.serve.static_serve_loop` over a synthesized queue.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import apply_approx, get_config
+from repro.distributed.sharding import data_parallel_mesh
 from repro.engine import modes as engine_modes
 from repro.models.registry import build_model
-from repro.train.steps import make_decode_step, make_prefill_step
+from repro.serve import (
+    ServeStats,
+    continuous_serve_loop,
+    static_serve_loop,
+    supports_continuous,
+    synth_requests,
+)
+from repro.serve.stats import percentile
 
 __all__ = ["ServeStats", "serve_loop", "main"]
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeStats:
-    """What one serve run measured (all wall times in seconds)."""
-
-    requests: int
-    tokens_out: int
-    wall_s: float
-    prefill_s: float  # total time in prefill across batches
-    decode_s: float  # total time in the decode loops
-    batch_latencies_s: tuple  # per-batch wall time, prefill through retire
-    devices: int
-
-    @property
-    def tokens_per_s(self) -> float:
-        return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
-
-    @property
-    def requests_per_s(self) -> float:
-        return self.requests / self.wall_s if self.wall_s > 0 else 0.0
-
-    def summary(self) -> str:
-        return (
-            f"served {self.requests} requests, {self.tokens_out} tokens in "
-            f"{self.wall_s:.2f}s ({self.tokens_per_s:.1f} tok/s on "
-            f"{self.devices} device(s))"
-        )
 
 
 def serve_loop(
@@ -71,70 +48,26 @@ def serve_loop(
     gen: int = 32,
     seed: int = 0,
 ) -> ServeStats:
-    """Run the static-batch prefill+decode loop; return its stats.
+    """Legacy entry point: static-batch loop over a synthesized queue.
 
-    Builds (and jits) the prefill/decode pair for ``prompt_len + gen``,
-    synthesizes ``requests`` random prompts of varying length, serves them
-    in batches of ``batch_size``, and times every stage.  Greedy decoding;
-    deterministic for a fixed ``seed``.
+    Kept for existing callers; new code should build a request list
+    (``repro.serve.synth_requests`` or real prompts) and call
+    ``static_serve_loop`` / ``continuous_serve_loop`` directly.
     """
-    cfg = model.cfg
-    max_seq = prompt_len + gen
-    mem_len = prompt_len if cfg.is_encdec else 0
-    prefill = jax.jit(make_prefill_step(model, max_seq, mem_len=mem_len))
-    decode = jax.jit(make_decode_step(model), donate_argnums=1)
-
-    rng = np.random.default_rng(seed)
-    queue = [
-        rng.integers(0, cfg.vocab_size, size=rng.integers(4, prompt_len + 1))
-        for _ in range(requests)
-    ]
-    done = 0
-    tokens_out = 0
-    prefill_s = 0.0
-    decode_s = 0.0
-    batch_latencies: list[float] = []
-    t0 = time.perf_counter()
-    while queue:
-        t_batch = time.perf_counter()
-        batch_reqs = [queue.pop(0) for _ in range(min(batch_size, len(queue)))]
-        b = len(batch_reqs)
-        toks = np.zeros((b, prompt_len), np.int32)
-        for i, r in enumerate(batch_reqs):
-            toks[i, -len(r):] = r  # left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        if cfg.is_encdec:
-            batch["src_embeds"] = jnp.asarray(
-                rng.standard_normal((b, prompt_len, cfg.d_model)), jnp.float32
-            )
-            batch["src_pos"] = jnp.arange(prompt_len, dtype=jnp.int32)[None].repeat(b, 0)
-        caches, logits = prefill(params, batch)
-        jax.block_until_ready(logits)
-        t_prefill = time.perf_counter()
-        prefill_s += t_prefill - t_batch
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        for g in range(gen):
-            logits, caches = decode(params, caches, tok, jnp.int32(prompt_len + g))
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            tokens_out += b
-        jax.block_until_ready(tok)
-        decode_s += time.perf_counter() - t_prefill
-        batch_latencies.append(time.perf_counter() - t_batch)
-        done += b
-    wall = time.perf_counter() - t0
-    return ServeStats(
-        requests=done,
-        tokens_out=tokens_out,
-        wall_s=wall,
-        prefill_s=prefill_s,
-        decode_s=decode_s,
-        batch_latencies_s=tuple(batch_latencies),
-        devices=len(jax.devices()),
+    queue = synth_requests(
+        requests, prompt_len=prompt_len, gen=gen,
+        vocab_size=model.cfg.vocab_size, seed=seed, vary_budget=False,
     )
+    result = static_serve_loop(
+        model, params, queue,
+        batch_size=batch_size, prompt_len=prompt_len, gen=gen,
+        seed=seed, warmup=False,
+    )
+    return result.stats
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
@@ -143,26 +76,65 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--approx-mode", default=None, choices=engine_modes.list_modes())
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--scheduler", default=None,
+                    choices=("continuous", "static"),
+                    help="continuous: per-step retirement/admission (the default "
+                         "where supported); static: the legacy re-batch-at-drain "
+                         "loop (auto-selected for encoder-decoder and "
+                         "recurrent-state archs, which continuous rejects)")
+    ap.add_argument("--vary-budget", action="store_true",
+                    help="draw per-request budgets in [1, gen] instead of gen")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="retire a row early when it emits this token id")
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="shard the decode batch over a ('data',) device mesh "
+                         "when multiple devices are available")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     if args.approx_mode:
         cfg = apply_approx(cfg, mode=args.approx_mode)
+
+    scheduler = args.scheduler
+    if scheduler is None:
+        scheduler = "continuous" if supports_continuous(cfg) else "static"
+        if scheduler == "static":
+            print(f"# {cfg.name}: auto-selected --scheduler static "
+                  f"(continuous supports attention-only decoder stacks)")
+    if args.data_parallel and scheduler != "continuous":
+        ap.error("--data-parallel only applies to --scheduler continuous")
+
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(args.seed))
 
-    stats = serve_loop(
-        model,
-        params,
-        requests=args.requests,
-        batch_size=args.batch,
-        prompt_len=args.prompt_len,
-        gen=args.gen,
-        seed=args.seed,
+    queue = synth_requests(
+        args.requests, prompt_len=args.prompt_len, gen=args.gen,
+        vocab_size=cfg.vocab_size, seed=args.seed,
+        vary_budget=args.vary_budget, eos_id=args.eos_id,
     )
-    print(stats.summary())
+    if scheduler == "continuous":
+        mesh = data_parallel_mesh(args.batch) if args.data_parallel else None
+        result = continuous_serve_loop(
+            model, params, queue,
+            batch_size=args.batch, prompt_len=args.prompt_len,
+            max_new=args.gen, mesh=mesh,
+        )
+    else:
+        result = static_serve_loop(
+            model, params, queue,
+            batch_size=args.batch, prompt_len=args.prompt_len, gen=args.gen,
+            seed=args.seed,
+        )
+    print(result.stats.summary())
+    lat = result.stats.request_latencies_s
+    if lat:
+        print(
+            f"per-request latency p50 {1e3 * percentile(lat, 50):.0f}ms "
+            f"p95 {1e3 * percentile(lat, 95):.0f}ms over "
+            f"{len(lat)} requests"
+        )
 
 
 if __name__ == "__main__":

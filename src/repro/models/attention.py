@@ -47,6 +47,20 @@ class KVCache(NamedTuple):
     v: jax.Array
 
 
+def _row_update(cache: jax.Array, update: jax.Array, starts: jax.Array) -> jax.Array:
+    """Per-row dynamic_update_slice along the cache sequence axis.
+
+    cache (B, T, KV, hd), update (B, S, KV, hd), starts (B,) int32: row i's
+    update lands at sequence offset starts[i].  Lowered as a batched
+    scatter, this is what lets continuous-batching slots sit at different
+    depths of the same physical cache.
+    """
+    def one(c, u, p):
+        return jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
+
+    return jax.vmap(one)(cache, update, starts)
+
+
 def init_attn(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
     kq, kk, kv, ko = jax.random.split(key, 4)
     p = {
@@ -162,7 +176,17 @@ def attention(
 
     Self-attention: ``kv_x`` is None.  Cross-attention: ``kv_x`` is the
     encoder memory (not causal, no rope).  Decode: ``cache`` given,
-    x is (B, 1, D) and ``cache_pos`` a scalar int32 write offset.
+    x is (B, 1, D) and ``cache_pos`` the int32 cache write offset —
+    either a scalar (legacy: physical slot == position for every row) or
+    a per-row ``(B,)`` vector.  With a vector, ``positions`` carries each
+    row's *true* position ids and the per-slot key positions are derived
+    from the row's pad offset ``cache_pos + S - 1 - positions[:, -1]``:
+    slot j of row i holds true position ``j - offset_i`` and slots outside
+    ``[offset_i, cache_pos_i + S - 1]`` (left pads, unwritten tail, the
+    admission hole of a retired-and-refilled slot) are masked invalid.
+    This is what lets left-padded prompts decode at their true positions
+    and lets the continuous-batching scheduler keep rows at different
+    depths of one physical cache.
     """
     cfg = ctx.cfg
     b, s, _ = x.shape
@@ -184,21 +208,36 @@ def attention(
     q = constrain(q, DP, None, TP, None)
 
     decode = s == 1 and cache is not None
+    per_row = cache_pos is not None and getattr(cache_pos, "ndim", 0) >= 1
     if cache is not None and kv_x is None:
-        kfull = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0)
-        )
-        vfull = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cache.v.dtype), (0, cache_pos, 0, 0)
-        )
+        if per_row:
+            starts = jnp.asarray(cache_pos, jnp.int32)
+            kfull = _row_update(cache.k, k.astype(cache.k.dtype), starts)
+            vfull = _row_update(cache.v, v.astype(cache.v.dtype), starts)
+        else:
+            kfull = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0)
+            )
+            vfull = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, cache_pos, 0, 0)
+            )
         if decode:  # flash-decode: shard the cache sequence axis over TP
             kfull = constrain(kfull, DP, TP, None, None)
             vfull = constrain(vfull, DP, TP, None, None)
         new_cache = KVCache(kfull, vfull)
         k, v = kfull, vfull
         t = kfull.shape[1]
-        k_pos = jnp.arange(t, dtype=jnp.int32)[None, :] * jnp.ones((b, 1), jnp.int32)
-        k_pos = jnp.where(k_pos <= cache_pos + s - 1, k_pos, -1)
+        jj = jnp.arange(t, dtype=jnp.int32)[None, :] * jnp.ones((b, 1), jnp.int32)
+        if per_row:
+            last = starts + jnp.int32(s - 1)  # (B,) physical slot of newest token
+            offset = last - mpos[:, -1]  # physical - true == per-row left-pad
+            k_pos = jnp.where(
+                (jj >= offset[:, None]) & (jj <= last[:, None]),
+                jj - offset[:, None],
+                -1,
+            )
+        else:
+            k_pos = jnp.where(jj <= cache_pos + s - 1, jj, -1)
         q_pos = mpos
     else:
         new_cache = None

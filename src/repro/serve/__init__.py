@@ -1,0 +1,35 @@
+"""Continuous-batching serve subsystem (docs/serving.md).
+
+Public surface:
+
+* :class:`~repro.serve.request.Request` / ``synth_requests`` — what the
+  scheduler consumes and the deterministic workload generator.
+* :class:`~repro.serve.scheduler.ContinuousScheduler` /
+  ``continuous_serve_loop`` — slot-based admission, per-row positions,
+  per-row retirement.
+* ``static_serve_loop`` — the legacy static-batch loop, kept as baseline
+  and parity oracle.
+* :class:`~repro.serve.stats.ServeStats` / ``ServeResult`` — what a run
+  measures and returns.
+"""
+
+from repro.serve.request import Request, RequestStats, synth_requests
+from repro.serve.scheduler import (
+    ContinuousScheduler,
+    continuous_serve_loop,
+    static_serve_loop,
+    supports_continuous,
+)
+from repro.serve.stats import ServeResult, ServeStats
+
+__all__ = [
+    "Request",
+    "RequestStats",
+    "synth_requests",
+    "ContinuousScheduler",
+    "continuous_serve_loop",
+    "static_serve_loop",
+    "supports_continuous",
+    "ServeResult",
+    "ServeStats",
+]

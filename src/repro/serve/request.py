@@ -1,0 +1,83 @@
+"""Serve-side request model: what enters the scheduler and what it reports.
+
+A :class:`Request` is one generation job — a prompt (true, unpadded
+token ids), a per-request generation budget, and an optional EOS id.
+The scheduler retires a row the moment either terminates it, which is
+exactly the behavior a static batch cannot express (a finished row there
+burns dead decode steps until the whole batch drains).
+
+:func:`synth_requests` builds the mixed-length / mixed-budget workload
+shared by the CLI, the ``serve_throughput`` benchmark suite, and the
+scheduler tests — one generator, so "same seed ⇒ same queue" holds
+across all three.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["Request", "RequestStats", "synth_requests"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request (true prompt, no padding)."""
+
+    id: int
+    tokens: np.ndarray  # (L,) int32 prompt token ids, L >= 1
+    max_new: int  # generation budget (>= 1)
+    eos_id: Optional[int] = None  # retire early on this token, if set
+
+    def __post_init__(self):
+        if len(self.tokens) < 1:
+            raise ValueError(f"request {self.id}: empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"request {self.id}: max_new must be >= 1, got {self.max_new}")
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStats:
+    """Per-request serving record (wall times in seconds from run start)."""
+
+    id: int
+    prompt_len: int
+    tokens_out: int
+    admit_step: int  # global decode step at admission (0 == initial fill)
+    ttft_s: float  # time to first token (queue wait + admission prefill)
+    latency_s: float  # time to retirement
+    finish_reason: str  # "budget" | "eos"
+
+
+def synth_requests(
+    count: int,
+    *,
+    prompt_len: int,
+    gen: int,
+    vocab_size: int,
+    seed: int = 0,
+    min_prompt: int = 4,
+    vary_budget: bool = True,
+    eos_id: Optional[int] = None,
+) -> list[Request]:
+    """Deterministic mixed workload: prompt lengths in [min_prompt, prompt_len],
+    budgets in [1, gen] (or all ``gen`` when ``vary_budget=False``)."""
+    rng = np.random.default_rng(seed)
+    out: list[Request] = []
+    for i in range(count):
+        lo = min(min_prompt, prompt_len)
+        length = int(rng.integers(lo, prompt_len + 1))
+        budget = int(rng.integers(1, gen + 1)) if vary_budget else gen
+        out.append(Request(
+            id=i,
+            tokens=rng.integers(0, vocab_size, size=length).astype(np.int32),
+            max_new=budget,
+            eos_id=eos_id,
+        ))
+    return out

@@ -1,0 +1,512 @@
+"""Continuous-batching scheduler: slot-based admission, per-row retirement.
+
+The serving core the ROADMAP's "heavy traffic" north star asks for.  A
+fixed pool of ``batch_size`` *slots* shares one physical KV cache of
+``prompt_len + max_new`` entries per slot; the decode step is jitted once
+for the full pool and every global step advances all live rows together.
+The continuous part is the slot lifecycle:
+
+  queued -> admitted -> decoding -> retired -> (slot reused)
+
+* **Admission** runs a single-row prefill of the new request (left-padded
+  into the fixed prompt bucket, with *true* per-row position ids so pads
+  are masked out of the cache) and scatters the resulting row cache into
+  the pool cache at the free slot — surviving rows are untouched: no
+  re-prefill, no re-batch barrier.
+* **Decode** passes per-row position vectors (true position and physical
+  write slot per row) to :func:`repro.train.steps.make_decode_step`, so
+  rows sitting at different depths advance in one step.
+* **Retirement** happens the step a row hits its budget or EOS; the freed
+  slot is refilled from the queue before the next decode step.  A static
+  batch, by contrast, burns dead decode steps on finished rows until the
+  whole batch drains — that difference is the ``serve_throughput``
+  benchmark's speedup column.
+
+``static_serve_loop`` is the pre-continuous static-batch loop, kept as
+the measured baseline and the parity oracle (it is exactly the old
+``launch.serve`` behavior, request-list interface aside).
+
+Scope: decoder-only families.  Per-row position masking is exact for
+attention caches; recurrent-state families (RG-LRU / SSD) integrate left
+pads into their state, so admitting a padded prompt for them is rejected
+(serve those with buckets equal to the true prompt length).
+Encoder-decoder configs are rejected at construction.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import functools
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.request import Request, RequestStats
+from repro.serve.stats import ServeResult, ServeStats
+from repro.train.steps import make_decode_step, make_prefill_step
+
+__all__ = [
+    "ContinuousScheduler",
+    "continuous_serve_loop",
+    "static_serve_loop",
+    "supports_continuous",
+]
+
+RECURRENT_KINDS = ("rglru", "ssd")  # layer kinds with pad-absorbing state
+
+
+def has_recurrent_state(cfg) -> bool:
+    return any(k in RECURRENT_KINDS for k in cfg.layer_pattern)
+
+
+def supports_continuous(cfg) -> bool:
+    """Whether the continuous scheduler fully supports ``cfg`` — including
+    padded admission of mixed-length prompts.  One predicate shared by the
+    scheduler's own checks and the CLI's auto-selection, so they cannot
+    drift: attention-only decoder stacks qualify; encoder-decoder configs
+    are rejected at construction and recurrent-state families reject
+    padded admission."""
+    return not cfg.is_encdec and not has_recurrent_state(cfg)
+
+
+def _scatter_row(big: dict, small: dict, row) -> dict:
+    """Write the single-row cache pytree ``small`` into row ``row`` of ``big``.
+
+    Leaf layout follows ``transformer.init_caches``: ``scan`` leaves carry
+    the batch on axis 1 (stacked layer groups first), ``rem`` leaves on
+    axis 0.  Jitted with the pool cache donated, this is the admission
+    primitive — one scatter, surviving rows untouched.
+    """
+    row = jnp.asarray(row, jnp.int32)
+
+    def scat(axis):
+        def f(b, s):
+            starts = [jnp.int32(0)] * b.ndim
+            starts[axis] = row
+            return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), tuple(starts))
+
+        return f
+
+    out = dict(big)
+    if "scan" in big:
+        out["scan"] = jax.tree_util.tree_map(scat(1), big["scan"], small["scan"])
+    if "rem" in big:
+        out["rem"] = jax.tree_util.tree_map(scat(0), big["rem"], small["rem"])
+    return out
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one live row."""
+
+    req: Request
+    tokens: list  # generated token ids (first from admission prefill)
+    admit_step: int
+    t_first: float  # perf_counter at first token
+    t_done: float = 0.0
+    done: bool = False
+    finish_reason: str = ""
+
+    @property
+    def emitted(self) -> int:
+        return len(self.tokens)
+
+    def absorb(self, tok: int) -> None:
+        self.tokens.append(tok)
+        if self.req.eos_id is not None and tok == self.req.eos_id:
+            self.done, self.finish_reason = True, "eos"
+        elif self.emitted >= self.req.max_new:
+            self.done, self.finish_reason = True, "budget"
+        if self.done:
+            self.t_done = time.perf_counter()
+
+
+class ContinuousScheduler:
+    """Slot-pool continuous-batching scheduler over one model + params.
+
+    Args:
+      model, params: a built decoder-only model and its parameters.
+      batch_size: number of slots (the jitted decode batch).
+      prompt_len: prompt bucket width; every prompt (<= prompt_len) is
+        left-padded to it so admission prefill compiles once.
+      max_new: per-slot generation capacity (request budgets must fit).
+      mesh: optional device mesh (e.g. ``sharding.data_parallel_mesh()``)
+        installed around every jitted call — the model's internal
+        ``constrain`` rules then shard the pool batch over the data axis.
+    """
+
+    def __init__(self, model, params, *, batch_size: int, prompt_len: int,
+                 max_new: int, mesh=None):
+        if model.cfg.is_encdec:
+            raise ValueError(
+                "ContinuousScheduler supports decoder-only families; "
+                "serve encoder-decoder configs with static_serve_loop"
+            )
+        if batch_size < 1 or prompt_len < 1 or max_new < 1:
+            raise ValueError("batch_size, prompt_len and max_new must be >= 1")
+        # recurrent-state layers integrate left pads into their state
+        # (positions cannot mask them out), so padded admission would be
+        # silently wrong — enforced per request in _pad
+        self._recurrent = has_recurrent_state(model.cfg)
+        self.model, self.params = model, params
+        self.batch_size, self.prompt_len, self.max_new = batch_size, prompt_len, max_new
+        self.capacity = prompt_len + max_new
+        self.mesh = mesh
+        self._cache_dtype = jnp.dtype(model.cfg.dtype)
+        prefill = make_prefill_step(model, self.capacity)
+        decode = make_decode_step(model)
+
+        # Admission, fused to one dispatch: single-row prefill + scatter
+        # into the freed slot + greedy first token.
+        def admit_step(params, caches, toks, pos, row):
+            row_caches, logits = prefill(params, {"tokens": toks, "positions": pos})
+            caches = _scatter_row(caches, row_caches, row)
+            tok0 = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
+            return caches, tok0
+
+        # Initial fill, when the queue covers every slot: one batched
+        # prefill *is* the pool cache — no scatter at all.
+        def prefill_pool(params, toks, pos):
+            caches, logits = prefill(params, {"tokens": toks, "positions": pos})
+            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+        # Decode with the greedy argmax fused in (one dispatch per step,
+        # and only (B,) token ids cross back to the host).
+        def decode_greedy(params, caches, tok, pos, write):
+            logits, caches = decode(params, caches, tok, pos, write)
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), caches
+
+        self._admit_step = jax.jit(admit_step, donate_argnums=1)
+        self._prefill_pool = jax.jit(prefill_pool)
+        self._decode = jax.jit(decode_greedy, donate_argnums=1)
+
+    # ------------------------------------------------------------- helpers
+    def _mesh_ctx(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.distributed.sharding import mesh_context
+
+        return mesh_context(self.mesh)
+
+    def _pad(self, req: Request) -> tuple:
+        """Left-pad one prompt into the bucket; true position ids for pads < 0."""
+        ln = req.prompt_len
+        if ln > self.prompt_len:
+            raise ValueError(
+                f"request {req.id}: prompt length {ln} exceeds bucket {self.prompt_len}"
+            )
+        if req.max_new > self.max_new:
+            raise ValueError(
+                f"request {req.id}: budget {req.max_new} exceeds slot capacity {self.max_new}"
+            )
+        if self._recurrent and ln < self.prompt_len:
+            raise ValueError(
+                f"request {req.id}: prompt length {ln} < bucket {self.prompt_len}, "
+                f"but {self.model.cfg.name} has recurrent-state layers that would "
+                f"integrate the left pads (positions cannot mask recurrent state); "
+                f"use a bucket equal to the prompt length, or pad prompts upstream"
+            )
+        toks = np.zeros((self.prompt_len,), np.int32)
+        toks[self.prompt_len - ln:] = req.tokens
+        pos = np.arange(self.prompt_len, dtype=np.int32) - (self.prompt_len - ln)
+        return toks, pos
+
+    def _prefill_row(self, req: Request, caches: dict, row: int):
+        """Fused admission: single-row prefill + scatter; returns (caches, tok0)."""
+        toks, pos = self._pad(req)
+        caches, tok0 = self._admit_step(
+            self.params, caches, jnp.asarray(toks[None]), jnp.asarray(pos[None]),
+            jnp.int32(row),
+        )
+        return caches, int(np.asarray(tok0))
+
+    def warmup(self) -> None:
+        """Compile the pool prefill, the admission step, and the pool decode."""
+        B = self.batch_size
+        caches = self.model.init_caches(B, self.capacity, self._cache_dtype)
+        with self._mesh_ctx():
+            toks = jnp.zeros((B, self.prompt_len), jnp.int32)
+            pos = jnp.broadcast_to(
+                jnp.arange(self.prompt_len, dtype=jnp.int32)[None], toks.shape
+            )
+            caches, _ = self._prefill_pool(self.params, toks, pos)
+            req = Request(id=-1, tokens=np.zeros(1, np.int32), max_new=1)
+            caches, _ = self._prefill_row(req, caches, 0)
+            zeros = jnp.zeros((B,), jnp.int32)
+            nxt, caches = self._decode(
+                self.params, caches, jnp.zeros((B, 1), jnp.int32), zeros, zeros,
+            )
+            jax.block_until_ready(nxt)
+
+    # ----------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request], *, warmup: bool = True) -> ServeResult:
+        """Serve ``requests`` to completion; returns stats + token streams."""
+        if warmup:
+            self.warmup()
+        B, P = self.batch_size, self.prompt_len
+        queue = collections.deque(requests)
+        slots: list[Optional[_Slot]] = [None] * B
+        retired: list[RequestStats] = []
+        outputs: dict = {}
+        cur_tok = np.zeros((B, 1), np.int32)
+        prefill_s = decode_s = 0.0
+        step = 0
+        busy_row_steps = 0
+
+        t0 = time.perf_counter()
+
+        def retire(i: int) -> None:
+            s = slots[i]
+            retired.append(RequestStats(
+                id=s.req.id,
+                prompt_len=s.req.prompt_len,
+                tokens_out=s.emitted,
+                admit_step=s.admit_step,
+                ttft_s=s.t_first - t0,
+                latency_s=(s.t_done or time.perf_counter()) - t0,
+                finish_reason=s.finish_reason,
+            ))
+            outputs[s.req.id] = np.asarray(s.tokens, np.int32)
+            slots[i] = None
+
+        def seat(i: int, req: Request, tok0: int, t_first: float) -> None:
+            slot = _Slot(req=req, tokens=[], admit_step=step, t_first=t_first)
+            slot.absorb(tok0)
+            cur_tok[i, 0] = tok0
+            slots[i] = slot
+            if slot.done:  # budget 1 / instant EOS: free the slot again
+                retire(i)
+
+        with self._mesh_ctx():
+            if len(queue) >= B:
+                # initial fill: the batched prefill of all B slots *is* the
+                # pool cache — one dispatch, no scatters
+                first = [queue.popleft() for _ in range(B)]
+                padded = [self._pad(r) for r in first]
+                toks = jnp.asarray(np.stack([t for t, _ in padded]))
+                pos = jnp.asarray(np.stack([p for _, p in padded]))
+                caches, tok0s = self._prefill_pool(self.params, toks, pos)
+                tok0s = np.asarray(tok0s)
+                t_b = time.perf_counter()
+                prefill_s += t_b - t0
+                for i, req in enumerate(first):
+                    seat(i, req, int(tok0s[i]), t_b)
+            else:
+                caches = self.model.init_caches(B, self.capacity, self._cache_dtype)
+            while True:
+                # retire finished rows, refill freed slots from the queue
+                for i in range(B):
+                    if slots[i] is not None and slots[i].done:
+                        retire(i)
+                    while slots[i] is None and queue:
+                        req = queue.popleft()
+                        t_a = time.perf_counter()
+                        caches, tok0 = self._prefill_row(req, caches, i)
+                        t_b = time.perf_counter()
+                        prefill_s += t_b - t_a
+                        seat(i, req, tok0, t_b)
+
+                live = [i for i in range(B) if slots[i] is not None]
+                if not live:
+                    break
+
+                # one pool decode step: per-row true position + write slot
+                pos = np.zeros((B,), np.int32)
+                write = np.zeros((B,), np.int32)
+                for i in range(B):
+                    if slots[i] is not None:
+                        s = slots[i]
+                        pos[i] = s.req.prompt_len + s.emitted - 1
+                        write[i] = P + s.emitted - 1
+                    else:  # dead lane: park at the last slot, offset 0
+                        pos[i] = write[i] = self.capacity - 1
+                t_d = time.perf_counter()
+                nxt, caches = self._decode(
+                    self.params, caches, jnp.asarray(cur_tok),
+                    jnp.asarray(pos), jnp.asarray(write),
+                )
+                nxt = np.asarray(nxt)
+                decode_s += time.perf_counter() - t_d
+                step += 1
+                busy_row_steps += len(live)
+                for i in live:
+                    slots[i].absorb(int(nxt[i]))
+                    cur_tok[i, 0] = nxt[i]
+
+        wall = time.perf_counter() - t0
+        stats = ServeStats(
+            requests=len(retired),
+            tokens_out=sum(r.tokens_out for r in retired),
+            wall_s=wall,
+            prefill_s=prefill_s,
+            decode_s=decode_s,
+            batch_latencies_s=(),
+            devices=len(jax.devices()),
+            scheduler="continuous",
+            decode_steps=step,
+            slot_utilization=busy_row_steps / (B * step) if step else 1.0,
+            ttft_s=tuple(r.ttft_s for r in retired),
+            request_latencies_s=tuple(r.latency_s for r in retired),
+        )
+        return ServeResult(stats=stats, request_stats=tuple(retired), outputs=outputs)
+
+
+def continuous_serve_loop(
+    model, params, requests: Sequence[Request], *,
+    batch_size: int, prompt_len: int, max_new: int,
+    mesh=None, warmup: bool = True,
+) -> ServeResult:
+    """One-shot convenience wrapper over :class:`ContinuousScheduler`."""
+    sched = ContinuousScheduler(
+        model, params,
+        batch_size=batch_size, prompt_len=prompt_len, max_new=max_new, mesh=mesh,
+    )
+    return sched.run(requests, warmup=warmup)
+
+
+# -------------------------------------------------------------------- static
+@functools.lru_cache(maxsize=8)
+def _static_steps(model, max_seq: int, mem_len: int):
+    """Jitted (prefill, decode) pair per (model, shapes) — cached so
+    repeated static runs (benchmark best-of repeats) reuse the compiles."""
+    return (
+        jax.jit(make_prefill_step(model, max_seq, mem_len=mem_len)),
+        jax.jit(make_decode_step(model), donate_argnums=1),
+    )
+
+
+def static_serve_loop(
+    model, params, requests: Sequence[Request], *,
+    batch_size: int, prompt_len: int, gen: int,
+    seed: int = 0, warmup: bool = True,
+) -> ServeResult:
+    """The pre-continuous static-batch loop, kept as baseline and oracle.
+
+    Pops ``batch_size`` requests at a time, left-pads prompts into the
+    shared bucket (all rows share the ``arange`` position ids — the
+    legacy position approximation), decodes every batch to the *largest*
+    budget in it, and only re-batches once the whole batch drains.
+    Finished rows burn dead decode steps until then; ``tokens_out``
+    counts useful (budget/EOS-bounded) tokens only, so the throughput
+    numbers are directly comparable with the continuous scheduler's.
+    """
+    cfg = model.cfg
+    max_seq = prompt_len + gen
+    mem_len = prompt_len if cfg.is_encdec else 0
+    try:
+        prefill, decode = _static_steps(model, max_seq, mem_len)
+    except TypeError:  # unhashable model/config: build fresh, uncached
+        prefill = jax.jit(make_prefill_step(model, max_seq, mem_len=mem_len))
+        decode = jax.jit(make_decode_step(model), donate_argnums=1)
+    rng = np.random.default_rng(seed)  # encoder-memory synthesis only
+
+    def make_batch(batch_reqs: list) -> dict:
+        b = len(batch_reqs)
+        toks = np.zeros((b, prompt_len), np.int32)
+        for i, r in enumerate(batch_reqs):
+            if r.prompt_len > prompt_len:
+                raise ValueError(
+                    f"request {r.id}: prompt length {r.prompt_len} exceeds bucket {prompt_len}"
+                )
+            if r.max_new > gen:
+                raise ValueError(
+                    f"request {r.id}: budget {r.max_new} exceeds gen {gen}"
+                )
+            toks[i, prompt_len - r.prompt_len:] = r.tokens
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.is_encdec:
+            batch["src_embeds"] = jnp.asarray(
+                rng.standard_normal((b, prompt_len, cfg.d_model)), jnp.float32
+            )
+            batch["src_pos"] = jnp.arange(prompt_len, dtype=jnp.int32)[None].repeat(b, 0)
+        return batch
+
+    if warmup and requests:
+        # compile every batch shape the loop will see: the full batch plus
+        # the uneven remainder batch, so no XLA compile lands in the
+        # timed region ("numbers measure scheduling, not compilation")
+        shapes = {min(batch_size, len(requests))}
+        if len(requests) > batch_size and len(requests) % batch_size:
+            shapes.add(len(requests) % batch_size)
+        for b0 in sorted(shapes):
+            dummy = [Request(id=-1, tokens=np.zeros(1, np.int32), max_new=1)] * b0
+            caches, logits = prefill(params, make_batch(dummy))
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            logits, caches = decode(params, caches, tok, jnp.int32(prompt_len))
+            jax.block_until_ready(logits)
+
+    queue = collections.deque(requests)
+    retired: list[RequestStats] = []
+    outputs: dict = {}
+    prefill_s = decode_s = 0.0
+    batch_latencies: list[float] = []
+    total_steps = 0
+    busy_row_steps = 0
+    total_row_steps = 0
+
+    t0 = time.perf_counter()
+    while queue:
+        t_batch = time.perf_counter()
+        batch_reqs = [queue.popleft() for _ in range(min(batch_size, len(queue)))]
+        caches, logits = prefill(params, make_batch(batch_reqs))
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter()
+        prefill_s += t_prefill - t_batch
+
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        step_toks = [tok]  # device-side; materialized once per batch, so the
+        t_first = time.perf_counter()  # decode loop dispatches async (pre-PR behavior)
+        steps = min(gen, max(r.max_new for r in batch_reqs))
+        for g in range(steps - 1):
+            logits, caches = decode(params, caches, tok, jnp.int32(prompt_len + g))
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            step_toks.append(tok)
+        jax.block_until_ready(tok)
+        decode_s += time.perf_counter() - t_first
+        host_toks = np.concatenate([np.asarray(t) for t in step_toks], axis=1)
+        streams = [list(map(int, row)) for row in host_toks]
+        total_steps += steps - 1
+        t_end = time.perf_counter()
+        batch_latencies.append(t_end - t_batch)
+
+        for r, stream in zip(batch_reqs, streams):
+            useful, reason = [], "budget"
+            for t in stream[: r.max_new]:
+                useful.append(t)
+                if r.eos_id is not None and t == r.eos_id:
+                    reason = "eos"
+                    break
+            # row r is live at decode step g iff it still needs token g+1:
+            # steps past its useful length are the static batch's dead steps
+            busy_row_steps += len(useful) - 1
+            total_row_steps += steps - 1
+            retired.append(RequestStats(
+                id=r.id, prompt_len=r.prompt_len, tokens_out=len(useful),
+                admit_step=0, ttft_s=t_first - t0, latency_s=t_end - t0,
+                finish_reason=reason,
+            ))
+            outputs[r.id] = np.asarray(useful, np.int32)
+
+    wall = time.perf_counter() - t0
+    stats = ServeStats(
+        requests=len(retired),
+        tokens_out=sum(r.tokens_out for r in retired),
+        wall_s=wall,
+        prefill_s=prefill_s,
+        decode_s=decode_s,
+        batch_latencies_s=tuple(batch_latencies),
+        devices=len(jax.devices()),
+        scheduler="static",
+        decode_steps=total_steps,
+        slot_utilization=(
+            busy_row_steps / total_row_steps if total_row_steps else 1.0
+        ),
+        ttft_s=tuple(r.ttft_s for r in retired),
+        request_latencies_s=tuple(r.latency_s for r in retired),
+    )
+    return ServeResult(stats=stats, request_stats=tuple(retired), outputs=outputs)

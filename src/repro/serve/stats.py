@@ -1,0 +1,88 @@
+"""Serve run measurements: aggregate :class:`ServeStats` + :class:`ServeResult`.
+
+``ServeStats`` is the aggregate record both schedulers produce (the
+``serve_throughput`` benchmark suite serializes it row-per-run); the
+static fields are unchanged from the original ``launch.serve`` loop so
+old readers keep working, and the continuous scheduler fills the per-
+request distributions (TTFT, end-to-end latency) plus slot utilization.
+
+``ServeResult`` bundles the stats with the per-request outcomes — the
+greedy token streams (what the parity tests bit-compare) and one
+:class:`~repro.serve.request.RequestStats` per retired request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serve.request import RequestStats
+
+__all__ = ["ServeStats", "ServeResult", "percentile"]
+
+
+def percentile(values, q: float) -> float:
+    """float percentile of a possibly-empty sequence (0.0 when empty)."""
+    vals = list(values)
+    if not vals:
+        return 0.0
+    return float(np.percentile(np.asarray(vals, np.float64), q))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """What one serve run measured (all wall times in seconds)."""
+
+    requests: int
+    tokens_out: int  # useful tokens only (per-request budget/EOS-bounded)
+    wall_s: float
+    prefill_s: float  # total time in prefill (batched or per-admission)
+    decode_s: float  # total time in the decode loops
+    batch_latencies_s: tuple  # static scheduler: per-batch wall time; else ()
+    devices: int
+    scheduler: str = "static"  # "static" | "continuous"
+    decode_steps: int = 0  # global decode steps executed
+    slot_utilization: float = 1.0  # mean fraction of live rows per decode step
+    ttft_s: tuple = ()  # per-request time-to-first-token
+    request_latencies_s: tuple = ()  # per-request end-to-end latency
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.requests / self.wall_s if self.wall_s > 0 else 0.0
+
+    def summary(self) -> str:
+        extra = ""
+        if self.scheduler == "continuous":
+            extra = (
+                f", {self.slot_utilization:.0%} slot util, "
+                f"ttft p50 {percentile(self.ttft_s, 50) * 1e3:.0f}ms"
+            )
+        return (
+            f"[{self.scheduler}] served {self.requests} requests, "
+            f"{self.tokens_out} tokens in {self.wall_s:.2f}s "
+            f"({self.tokens_per_s:.1f} tok/s on {self.devices} device(s))"
+            + extra
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """Stats + per-request outcomes of one serve run."""
+
+    stats: ServeStats
+    request_stats: tuple  # of RequestStats, retirement order
+    outputs: dict  # request id -> np.ndarray int32 generated tokens
+
+    def tokens_for(self, request_id: int) -> np.ndarray:
+        return self.outputs[request_id]
+
+    def stats_for(self, request_id: int) -> RequestStats:
+        for rs in self.request_stats:
+            if rs.id == request_id:
+                return rs
+        raise KeyError(f"request {request_id} was not served")

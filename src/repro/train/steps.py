@@ -147,7 +147,15 @@ def make_train_step(model: Model, tcfg: TrainConfig):
 
 # ------------------------------------------------------------------ serving
 def make_prefill_step(model: Model, max_seq: int, *, mem_len: int = 0):
-    """prefill(params, batch) -> (caches, last_token_logits)."""
+    """prefill(params, batch) -> (caches, last_token_logits).
+
+    ``batch["positions"]`` (optional, (B, S) int32) supplies per-row
+    *true* position ids for left-padded prompts — pad slots carry
+    negative ids and are masked out of the KV cache, so a short prompt
+    padded to the bucket width attends (and is later attended to) at its
+    real positions.  Without it, positions are the shared ``arange(S)``
+    (every row full-length, the legacy static-batch behavior).
+    """
     cfg = model.cfg
     cache_dtype = jnp.dtype(cfg.dtype)
 
@@ -160,11 +168,16 @@ def make_prefill_step(model: Model, max_seq: int, *, mem_len: int = 0):
             memory = model.encode(params, batch["src_embeds"], batch["src_pos"], ctx)
             ck, cv = model.precompute_cross(params, memory, ctx)
             caches = caches._replace(cross_k=ck.astype(cache_dtype), cross_v=cv.astype(cache_dtype))
-        pos = jnp.arange(s, dtype=jnp.int32)[None, :] * jnp.ones((b, 1), jnp.int32)
+        if "positions" in batch:
+            pos = jnp.asarray(batch["positions"], jnp.int32)
+            cache_pos = jnp.zeros((b,), jnp.int32)  # per-row path in attention
+        else:
+            pos = jnp.arange(s, dtype=jnp.int32)[None, :] * jnp.ones((b, 1), jnp.int32)
+            cache_pos = jnp.int32(0)
         if cfg.use_mrope:
             pos = jnp.broadcast_to(pos[None], (3, b, s))
         hidden, caches, _ = model.forward(
-            params, tokens, pos, ctx, caches=caches, cache_pos=jnp.int32(0)
+            params, tokens, pos, ctx, caches=caches, cache_pos=cache_pos
         )
         logits = model.lm_head(params, hidden[:, -1:, :])
         return caches, logits
@@ -173,17 +186,32 @@ def make_prefill_step(model: Model, max_seq: int, *, mem_len: int = 0):
 
 
 def make_decode_step(model: Model):
-    """decode(params, caches, token (B,1), pos scalar) -> (logits, caches)."""
+    """decode(params, caches, token (B,1), pos, write_pos=None) -> (logits, caches).
+
+    ``pos`` is either a scalar (legacy: every row decodes at the same
+    position, which doubles as the cache write slot) or a per-row ``(B,)``
+    vector of *true* positions.  With a vector, ``write_pos`` (``(B,)``,
+    default ``pos``) gives each row's physical cache write slot — for a
+    row admitted into a continuous-batching slot with pad offset d, the
+    true position p writes physical slot p + d.  Per-row positions are
+    what let one decode step advance rows sitting at different depths.
+    """
     cfg = model.cfg
 
-    def decode(params, caches, token: jax.Array, pos: jax.Array):
+    def decode(params, caches, token: jax.Array, pos: jax.Array, write_pos=None):
         b = token.shape[0]
         ctx = model.ctx()
-        p = (pos * jnp.ones((b, 1), jnp.int32)).astype(jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 0:
+            p = pos * jnp.ones((b, 1), jnp.int32)
+            cache_pos = pos
+        else:
+            p = pos[:, None]
+            cache_pos = pos if write_pos is None else jnp.asarray(write_pos, jnp.int32)
         if cfg.use_mrope:
             p = jnp.broadcast_to(p[None], (3, b, 1))
         hidden, new_caches, _ = model.forward(
-            params, token, p, ctx, caches=caches, cache_pos=pos
+            params, token, p, ctx, caches=caches, cache_pos=cache_pos
         )
         logits = model.lm_head(params, hidden)
         return logits, new_caches

@@ -26,11 +26,13 @@ def _kwargs(mode, n, t, fix):
 @pytest.mark.parametrize("n,t,fix", [(8, 4, True), (8, 2, False), (6, 3, True), (4, 1, True)])
 @pytest.mark.parametrize("mode", sorted(engine.list_modes()))
 def test_backend_parity_bit_identical(mode, n, t, fix):
-    """Every registered mode must produce bit-identical results on the
-    reference and Pallas backends (modes without a Pallas body fall back
-    to the reference body, so parity there is structural).  Under native
-    lowering (TPU) the tiled MXU accumulation order may differ in float
-    LSBs, so there parity is tight-allclose instead."""
+    """Every mode with a Pallas body must produce bit-identical results on
+    the reference and Pallas backends.  Under native lowering (TPU) the
+    tiled MXU accumulation order may differ in float LSBs, so there
+    parity is tight-allclose instead.  (Modes without a Pallas body
+    reject an explicit backend='pallas' — covered separately.)"""
+    if engine.get_mode(mode).pallas is None:
+        pytest.skip(f"mode {mode!r} has no Pallas body")
     x, w = _operands(32, 64, 16, seed=n * 10 + t)
     kw = _kwargs(mode, n, t, fix)
     ref = np.asarray(engine.matmul(x, w, backend="reference", **kw))
@@ -93,6 +95,73 @@ def test_duplicate_mode_registration_rejected():
     spec = engine.get_mode("exact")
     with pytest.raises(ValueError, match="already registered"):
         engine.register_mode(spec)
+
+
+def test_explicit_pallas_on_mode_without_body_raises():
+    """backend='pallas' on a mode with no Pallas body must not silently run
+    the reference body — that is an explicit request; only 'auto' falls
+    back."""
+    x, w = _operands(4, 4, 4)
+    for mode in sorted(engine.list_modes()):
+        spec = engine.get_mode(mode)
+        if spec.pallas is not None:
+            continue
+        with pytest.raises(ValueError, match=mode):
+            engine.matmul(x, w, mode=mode, backend="pallas",
+                          **({"key": jax.random.PRNGKey(0)} if spec.needs_key else {}))
+        # 'auto' keeps the documented reference fallback
+        kw = _kwargs(mode, 8, 4, True)
+        out = engine.matmul(x, w, backend="auto", **kw)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(engine.matmul(x, w, backend="reference", **kw))
+        )
+
+
+def test_straight_through_integer_extra_cotangent():
+    """A mode whose ``prepare`` returns integer arrays (e.g. an int32 LUT)
+    must still be trainable: zero cotangents are cast to the tangent type
+    (float0 for ints) instead of crashing ``custom_vjp`` under grad."""
+    from repro.engine import modes as engine_modes
+
+    name = "_test_int_extra"
+
+    def prepare(x, w, p, key):
+        lut = jnp.arange(16, dtype=jnp.int32)  # int32 extra: the crash case
+        return (lut, jnp.float32(0.5))
+
+    def ref(x, w, p, lut, scale):
+        return (x @ w) * scale + lut.sum().astype(jnp.float32) * 0.0
+
+    engine.register_mode(engine_modes.ModeSpec(
+        name=name, reference=ref, prepare=prepare, differentiable=False,
+        description="test-only: int32 extra under straight-through",
+    ))
+    try:
+        x, w = _operands(4, 6, 3, seed=2)
+        gx, gw = jax.grad(
+            lambda x, w: engine.matmul(x, w, mode=name).sum(), argnums=(0, 1)
+        )(x, w)
+        # straight-through: backward is the *exact-matmul* VJP, scale ignored
+        ex, ew = jax.grad(lambda x, w: (x @ w).sum(), argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(ex), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(ew), rtol=1e-6)
+    finally:
+        engine_modes._REGISTRY.pop(name, None)
+
+
+@pytest.mark.parametrize(
+    "mode", [m for m in sorted(engine.list_modes()) if not engine.get_mode(m).differentiable]
+)
+def test_every_nondifferentiable_mode_is_trainable(mode):
+    """jax.grad must run through every registered non-differentiable mode
+    (the engine's straight-through rule, whatever the mode's extras)."""
+    x, w = _operands(6, 8, 4, seed=13)
+    kw = _kwargs(mode, 8, 4, True)
+    gx, gw = jax.grad(
+        lambda x, w: engine.matmul(x, w, **kw).sum(), argnums=(0, 1)
+    )(x, w)
+    assert np.isfinite(np.asarray(gx)).all() and np.isfinite(np.asarray(gw)).all()
+    assert float(np.abs(np.asarray(gx)).sum()) > 0
 
 
 @pytest.mark.parametrize("mode", ["bitexact", "lowrank", "inject"])

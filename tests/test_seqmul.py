@@ -117,6 +117,29 @@ def test_validation_errors():
         seqmul.seq_mul_words(a, a, n=33, t=4, approx=True)
 
 
+def test_n1_degenerate_split():
+    """n=1 is advertised (1 <= n <= MAX_N) and must not be rejected: the
+    split is degenerate (no MSP to segment), t=1 is accepted, and exact
+    == approx == a*b over the whole 1-bit operand space."""
+    from repro.engine.recurrence import validate_nt
+
+    validate_nt(1, 1)  # the degenerate split is legal...
+    with pytest.raises(ValueError, match="degenerate"):
+        validate_nt(1, 2)  # ...but only t=1
+    a, b = _all_pairs(1)
+    a, b = a.astype(np.uint32), b.astype(np.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(seqmul.seq_mul_exact_u32(a, b, n=1)), a * b
+    )
+    for fix in (False, True):
+        np.testing.assert_array_equal(
+            np.asarray(seqmul.seq_mul_approx_u32(a, b, n=1, t=1, fix_to_1=fix)), a * b
+        )
+    w = seqmul.seq_mul_words(a, b, n=1, t=1, approx=True)
+    np.testing.assert_array_equal(seqmul.assemble_product_u64(w, n=1, t=1), a * b)
+    np.testing.assert_array_equal(np.asarray(w.c_last), np.zeros_like(a))
+
+
 def test_packed_u32_helpers():
     n, t = 8, 4
     rng = np.random.default_rng(0)
