@@ -1,0 +1,185 @@
+"""Accuracy-configurability sweep: the error-vs-throughput Pareto front.
+
+The paper's headline knob is the splitting point ``t``; this suite drives
+it end to end through the accuracy-configuration subsystem
+(``repro.engine.config``).  For every candidate split it records
+
+* the controller's closed-form metrics (``sweep_t``: the Eq. 10 ER upper
+  estimate ``er_bound``, the deferred-carry NMED estimate, Eq. 11 MAE,
+  and the gate-delay cycle cost the controller minimizes),
+* the *measured* multiplier error from exhaustive simulation
+  (``core.error_metrics``) — every row checks ``er_measured <=
+  er_bound``, i.e. the measured error stays within the closed-form bound
+  the controller budgets against (``er_within_bound``),
+* per engine mode, the measured GEMM wall-time / throughput and the
+  GEMM-level relative error against the exact matmul,
+
+and marks the per-mode Pareto-optimal rows (no other split of the same
+mode has both lower measured NMED and higher tokens/sec).  A second
+table pins every registered quality tier's controller resolution
+(tier x target -> (n, t, mode)), so a tier drifting to a different
+split shows up as a gated row change.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
+
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+from benchmarks.registry import Suite, register_suite
+from repro import engine
+from repro.core import error_metrics
+from repro.engine import config as engine_config
+
+N_BITS = 8  # LUT-backed modes require n <= 8; exhaustive ground truth is cheap
+
+FULL = {
+    "ts": (1, 2, 3, 4, 5, 6, 7),
+    "modes": ("bitexact", "lowrank", "inject"),
+    "shape": (64, 128, 64),
+    "warmup": 2,
+    "repeats": 8,
+}
+REDUCED = {
+    "ts": (2, 4),
+    "modes": ("bitexact",),
+    "shape": (16, 32, 16),
+    "warmup": 1,
+    "repeats": 3,
+}
+
+
+def _time_us(fn, *, warmup: int, repeats: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.percentile(times, 50))
+
+
+def _mark_pareto(rows: list) -> None:
+    """Per mode: a row is Pareto-optimal unless another row of the same
+    mode is at least as good on both axes (lower measured NMED, higher
+    tokens/sec) and strictly better on one."""
+    for row in rows:
+        dominated = any(
+            other is not row
+            and other["mode"] == row["mode"]
+            and other["nmed_measured"] <= row["nmed_measured"]
+            and other["tokens_per_s"] >= row["tokens_per_s"]
+            and (
+                other["nmed_measured"] < row["nmed_measured"]
+                or other["tokens_per_s"] > row["tokens_per_s"]
+            )
+            for other in rows
+        )
+        row["pareto_optimal"] = int(not dominated)
+
+
+def rows(reduced: bool = False) -> list:
+    cfg = REDUCED if reduced else FULL
+    m, k, n_cols = cfg["shape"]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n_cols)), jnp.float32)
+    exact = np.asarray(x @ w, np.float64)
+    exact_norm = float(np.linalg.norm(exact))
+    key = jax.random.PRNGKey(0)
+
+    points = {p.t: p for p in engine_config.sweep_t(N_BITS)}
+    measured = {
+        t: error_metrics.exhaustive_eval(N_BITS, t, fix_to_1=True)
+        for t in cfg["ts"]
+    }
+
+    out = []
+    for mode in cfg["modes"]:
+        spec = engine.get_mode(mode)
+        for t in cfg["ts"]:
+            p, rep = points[t], measured[t]
+            kw = dict(n=N_BITS, t=t, mode=mode, backend="reference")
+            if spec.needs_key:
+                kw["key"] = key
+            fn = jax.jit(lambda x=x, w=w, kw=kw: engine.matmul(x, w, **kw))
+            wall_us = _time_us(fn, warmup=cfg["warmup"], repeats=cfg["repeats"])
+            y = np.asarray(fn(), np.float64)
+            out.append({
+                "table": "accuracy_pareto",
+                "mode": mode,
+                "n": N_BITS,
+                "t": t,
+                # controller side (closed form)
+                "er_bound": p.er_bound,
+                "nmed_est": p.nmed_est,
+                "mae_eq11": p.mae,
+                "delay_model": p.delay,
+                # measured multiplier error (exhaustive, fix-to-1 on)
+                "er_measured": rep.er,
+                "nmed_measured": rep.nmed,
+                "med_abs_measured": rep.med_abs,
+                "er_within_bound": int(rep.er <= p.er_bound),
+                # measured GEMM cost / fidelity for this mode
+                "gemm_rel_err": float(np.linalg.norm(y - exact) / exact_norm),
+                "wall_us_median": round(wall_us, 1),
+                "tokens_per_s": round(m / (wall_us * 1e-6), 1),
+                "warmup": cfg["warmup"],
+                "repeats": cfg["repeats"],
+            })
+    _mark_pareto(out)
+
+    for tier_name in engine_config.list_tiers():
+        qc = engine_config.resolve_tier(tier_name, n=N_BITS)
+        for q in qc.per_target:
+            out.append({
+                "table": "tier_resolution",
+                "tier": tier_name,
+                "target": q.target,
+                "mode": q.mode or qc.mode,
+                "n": q.n,
+                "t": q.t,
+            })
+
+    out.append({
+        "table": "accuracy_pareto_summary",
+        "rows_within_bound": sum(
+            r.get("er_within_bound", 0) for r in out if r["table"] == "accuracy_pareto"
+        ),
+        "all_rows_within_bound": int(all(
+            r["er_within_bound"] for r in out if r["table"] == "accuracy_pareto"
+        )),
+        "pareto_points": sum(
+            r.get("pareto_optimal", 0) for r in out if r["table"] == "accuracy_pareto"
+        ),
+    })
+    return out
+
+
+register_suite(Suite(
+    name="accuracy_pareto",
+    rows=rows,
+    description="t-sweep per engine mode: measured error vs tokens/sec Pareto "
+                "front + controller bounds + tier resolutions",
+    key_fields=("table", "mode", "n", "t", "tier", "target"),
+    # deterministic metrics only (timing fields are recorded, not gated)
+    lower_is_better=("er_measured", "nmed_measured", "gemm_rel_err"),
+    higher_is_better=("er_within_bound", "all_rows_within_bound"),
+))
+
+
+if __name__ == "__main__":
+    for r in rows(reduced=True):
+        print(r)

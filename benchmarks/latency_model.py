@@ -24,21 +24,18 @@ if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
     import os
     import sys
 
-    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
 
 from benchmarks.registry import Suite, register_suite
 
+# The gate-delay cost model lives with the accuracy-configuration
+# controller (repro.engine.config) — the (n, t) resolver minimizes the
+# same per-cycle critical path this suite plots, so the two cannot drift.
+from repro.engine.config import T_FA, T_MUX, ripple_delay, segmented_delay
+
 NS = (4, 8, 16, 32, 64, 128, 256)
-T_FA = 1.0  # normalized full-adder delay
-T_MUX = 0.4  # fix-to-1 mux + D-FF setup margin
-
-
-def ripple_delay(n: int) -> float:
-    return n * T_FA
-
-
-def segmented_delay(n: int, t: int) -> float:
-    return max(t, n - t) * T_FA + T_MUX
 
 
 def cla_delay(n: int) -> float:

@@ -13,7 +13,27 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-__all__ = ["ApproxConfig", "ModelConfig", "ShapeConfig", "TrainConfig", "SHAPES"]
+__all__ = [
+    "ApproxConfig", "LayerQuality", "ModelConfig", "ShapeConfig",
+    "TrainConfig", "SHAPES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerQuality:
+    """One GEMM class's resolved accuracy selection.
+
+    Produced by the ``repro.engine.config`` controller (quality tiers ->
+    per-target (n, t) via the closed-form error models) and carried in
+    ``ApproxConfig.overrides``; ``None`` mode/backend inherit the base
+    ``ApproxConfig`` values.
+    """
+
+    target: str  # "mlp" | "attn" | "moe"
+    n: int
+    t: int
+    mode: Optional[str] = None
+    backend: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,6 +41,9 @@ class ApproxConfig:
     """Approximate-multiplier deployment for a model's GEMMs."""
 
     enabled: bool = False
+    # (n, t) defaults are the ``balanced`` quality tier's mlp resolution
+    # at the engine default bit-width (engine.config.default_t(8) == 4 —
+    # pinned by tests); per-target selections ride in ``overrides``.
     n: int = 8  # operand magnitude bit-width
     t: int = 4  # carry-chain splitting point
     fix_to_1: bool = True
@@ -32,6 +55,26 @@ class ApproxConfig:
     rank: int = 8
     # which projections are approximated ('mlp', 'attn', 'moe')
     targets: tuple = ("mlp",)
+    # engine backend for the targeted GEMMs ('auto' | 'reference' | 'pallas')
+    backend: str = "auto"
+    # per-target LayerQuality entries (engine.config.apply_quality);
+    # call sites resolve them with for_target
+    overrides: tuple = ()
+
+    def for_target(self, target: str) -> "ApproxConfig":
+        """The effective config for one GEMM class: the matching
+        ``LayerQuality`` override folded in, or ``self`` unchanged."""
+        for q in self.overrides:
+            if q.target == target:
+                return dataclasses.replace(
+                    self,
+                    n=q.n,
+                    t=q.t,
+                    mode=self.mode if q.mode is None else q.mode,
+                    backend=self.backend if q.backend is None else q.backend,
+                    overrides=(),
+                )
+        return self
 
 
 @dataclasses.dataclass(frozen=True)

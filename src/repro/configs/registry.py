@@ -8,10 +8,14 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
+from typing import Optional
 
 from repro.configs.base import ApproxConfig, ModelConfig, SHAPES, ShapeConfig
 
-__all__ = ["ARCHS", "get_config", "list_archs", "apply_approx", "shapes_for", "SHAPES"]
+__all__ = [
+    "ARCHS", "get_config", "list_archs", "apply_approx", "apply_quality",
+    "shapes_for", "SHAPES",
+]
 
 # arch-id -> module name under repro.configs
 ARCHS = {
@@ -50,27 +54,44 @@ def apply_approx(
     cfg: ModelConfig,
     *,
     n: int = 8,
-    t: int = 4,
+    t: Optional[int] = None,
     mode: str = "inject",
     fix_to_1: bool = True,
     rank: int = 8,
     targets: tuple = ("mlp",),
+    backend: str = "auto",
 ) -> ModelConfig:
     """Deploy the segmented-carry-chain approximate multiplier on ``cfg``.
 
     ``mode`` is validated against the engine's mode registry so a typo
-    fails here (listing the valid names) rather than at trace time.
+    fails here (listing the valid names) rather than at trace time.  A
+    ``t`` left ``None`` is resolved by the accuracy-configuration
+    controller (``engine.config.default_t(n)`` — the balanced tier's
+    cheapest valid split) instead of a hardcoded constant; for named
+    tiers with per-GEMM-class selection use :func:`apply_quality`.
     """
-    from repro.engine import modes as engine_modes  # lazy: configs stay leaf-light
+    from repro.engine import config as engine_config  # lazy: configs stay leaf-light
+    from repro.engine import modes as engine_modes
 
     engine_modes.get_mode(mode)
+    if t is None:
+        t = engine_config.default_t(n)
     return dataclasses.replace(
         cfg,
         approx=ApproxConfig(
             enabled=True, n=n, t=t, fix_to_1=fix_to_1, mode=mode, rank=rank,
-            targets=targets,
+            targets=targets, backend=backend,
         ),
     )
+
+
+def apply_quality(cfg: ModelConfig, tier, *, n: int = 8, order: int = 1) -> ModelConfig:
+    """Deploy a named quality tier (``repro.engine.config``) onto ``cfg``:
+    the controller resolves each budgeted GEMM class to its cheapest
+    valid splitting point and installs the per-target overrides."""
+    from repro.engine import config as engine_config  # lazy import as above
+
+    return engine_config.apply_quality(cfg, tier, n=n, order=order)
 
 
 def shapes_for(cfg: ModelConfig) -> dict[str, ShapeConfig]:

@@ -94,8 +94,13 @@ def mul_exact_bits(a_bits: np.ndarray, b_bits: np.ndarray) -> np.ndarray:
 def mul_approx_bits(
     a_bits: np.ndarray, b_bits: np.ndarray, *, t: int, fix_to_1: bool = True
 ) -> np.ndarray:
-    """Approximate multiplication per Section IV-A (segmented carry chain)."""
+    """Approximate multiplication per Section IV-A (segmented carry chain).
+
+    Accepts the same degenerate n=1 split as ``engine.recurrence
+    .validate_nt`` (t=1: single-cycle product, no carry to defer, exact
+    and approximate coincide).
+    """
     n = a_bits.shape[-1]
-    if not (1 <= t <= n - 1):
+    if not (1 <= t <= max(1, n - 1)):
         raise ValueError(f"t={t} out of range for n={n}")
     return _mul_bits(a_bits, b_bits, t=t, fix_to_1=fix_to_1)

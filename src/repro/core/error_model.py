@@ -35,6 +35,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.engine.recurrence import validate_nt
+
 __all__ = [
     "mae_closed_form",
     "max_ed_dropped_carry",
@@ -44,13 +46,29 @@ __all__ = [
 
 
 def mae_closed_form(n: int, t: int) -> int:
-    """Eq. (11): MAE = 2^{n+t-1} - 2^{t+1}."""
+    """Eq. (11): MAE = 2^{n+t-1} - 2^{t+1}.
+
+    Degenerate splits accepted by ``validate_nt`` sit outside the paper's
+    1 <= t <= n-1, n >= 2 derivation and are defined explicitly: at n=1
+    the single-cycle product never produces an LSP carry, so exact and
+    approximate coincide and the maximum deferred-carry overshoot is 0
+    (the raw formula would go negative).  n=2, t=1 evaluates to 0 through
+    the formula itself — the one-cycle deferral window closes before the
+    deferred carry could land high — and is cross-checked against
+    exhaustive enumeration via ``core.boolean_ref`` in the tests.
+    """
+    validate_nt(n, t)
+    if n == 1:
+        return 0
     return (1 << (n + t - 1)) - (1 << (t + 1))
 
 
 def max_ed_dropped_carry(n: int, t: int) -> int:
     """Worst positive ED (p̂ < p) when the final LSP carry is dropped
     and fix-to-1 is disabled: the carry's product weight 2^{t} * 2^{n-1}."""
+    validate_nt(n, t)
+    if n == 1:
+        return 0
     return 1 << (n + t - 1)
 
 
@@ -73,8 +91,14 @@ def _half_adder_chain(paug, pm, c_in0, t_boundary=None, c_boundary=0.0):
     Returns (psum[i], carry_into[i+1] list); at ``t_boundary`` the chain's
     incoming carry is replaced by ``c_boundary`` (the deferred D-FF value)
     while the native carry-out at t_boundary-1 is reported separately.
+    A boundary at ``nbits`` means the whole chain is LSP (degenerate n=1
+    split): the reported LSP carry-out is the final carry.  Boundaries
+    beyond the chain used to silently report a 0.0 LSP carry-out; they
+    are rejected now.
     """
     nbits = len(paug)
+    if t_boundary is not None and t_boundary > nbits:
+        raise ValueError(f"t_boundary={t_boundary} beyond the {nbits}-bit chain")
     psum = np.zeros(nbits)
     c = c_in0
     c_lsp_out = 0.0
@@ -86,8 +110,8 @@ def _half_adder_chain(paug, pm, c_in0, t_boundary=None, c_boundary=0.0):
         pp = paug[i] * (1 - pm[i]) + (1 - paug[i]) * pm[i]
         psum[i] = pp * (1 - c) + (1 - pp) * c
         c = g + pp * c
-    if t_boundary is None or t_boundary >= nbits:
-        c_lsp_out = c if t_boundary == nbits else c_lsp_out
+    if t_boundary == nbits:
+        c_lsp_out = c
     return psum, c, c_lsp_out
 
 
@@ -145,7 +169,15 @@ def _estimate_order1(n, t, pa, pb):
             for i in range(n):
                 paug_c = ps_c[i + 1]  # P(aug_i=1 | a_i = v)
                 if i == t:
-                    c_out_lsp = pa[i - 1] * c_cond[1] + (1 - pa[i - 1]) * c_cond[0]
+                    # marginalize over a_{i-1}.  estimate() already
+                    # enforces t >= 1 via validate_nt; the i > 0 guard is
+                    # defensive for direct callers so a boundary at 0 can
+                    # never read pa[-1] (the old silent wraparound).
+                    c_out_lsp = (
+                        pa[i - 1] * c_cond[1] + (1 - pa[i - 1]) * c_cond[0]
+                        if i > 0
+                        else c_cond[0]
+                    )
                     c_cond = np.array([p_cff, p_cff])  # D-FF, decorrelated
                 c_marg = (
                     pa[i - 1] * c_cond[1] + (1 - pa[i - 1]) * c_cond[0]
@@ -166,7 +198,7 @@ def _estimate_order1(n, t, pa, pb):
                     cv = c_cond[v] if i > 0 else c_cond[0]
                     sum_cond_prev[i, v] = pp_m * (1 - cv) + (1 - pp_m) * cv
                 c_cond = c_next
-            if t == n:  # degenerate (not used: t <= n-1)
+            if t == n:  # degenerate n=1 split: the whole chain is LSP
                 c_out_lsp = pa[n - 1] * c_cond[1] + (1 - pa[n - 1]) * c_cond[0]
             c_msp_out = pa[n - 1] * c_cond[1] + (1 - pa[n - 1]) * c_cond[0]
             sum_cond_prev[n, :] = c_msp_out
@@ -194,9 +226,20 @@ def estimate(
     pa/pb: per-bit P(bit = 1) of the operands (length n); default 0.5
     (uniform inputs).  A measured input PDF maps to per-bit marginals —
     the estimator only consumes marginals, mirroring the paper.
+
+    ``(n, t)`` is validated through the engine's ``validate_nt`` (the
+    same gate the recurrence itself applies), and ``pa``/``pb`` must be
+    length-n probability vectors — the estimator used to silently accept
+    invalid shapes and wrap negative indices.
     """
+    validate_nt(n, t)
     pa = np.full(n, 0.5) if pa is None else np.asarray(pa, float)
     pb = np.full(n, 0.5) if pb is None else np.asarray(pb, float)
+    for name, p in (("pa", pa), ("pb", pb)):
+        if p.shape != (n,):
+            raise ValueError(f"{name} must have shape ({n},), got {p.shape}")
+        if np.any(p < 0.0) or np.any(p > 1.0):
+            raise ValueError(f"{name} entries must be probabilities in [0, 1]")
     if order == 0:
         er_cycles, cff = _estimate_order0(n, t, pa, pb)
     elif order == 1:

@@ -39,7 +39,16 @@ _LAZY = {
     "GemmParams": "modes",
     "quantize_operands": "modes",
     "bitexact_gemm_int": "modes",
+    "resolve_t": "config",
+    "resolve_tier": "config",
+    "apply_quality": "config",
+    "list_tiers": "config",
+    "get_tier": "config",
+    "ErrorBudget": "config",
+    "QualityTier": "config",
+    "QualityError": "config",
     "artifacts": None,
+    "config": None,
     "dispatch": None,
     "modes": None,
     "policy": None,

@@ -36,6 +36,20 @@ __all__ = ["BACKENDS", "matmul", "multiply", "resolve_backend"]
 BACKENDS = ("auto", "reference", "pallas")
 
 
+def _resolve_nt(n, t):
+    """Fill unspecified (n, t) from the accuracy-configuration subsystem:
+    the bit-width defaults to ``engine.config.DEFAULT_N`` and the split
+    to the controller's ``balanced``-tier resolution for that width —
+    the historical hardcoded ``n=8, t=4`` as a derived quantity."""
+    from repro.engine import config as _config
+
+    if n is None:
+        n = _config.DEFAULT_N
+    if t is None:
+        t = _config.default_t(n)
+    return n, t
+
+
 def resolve_backend(backend: str, spec: _modes.ModeSpec | None = None) -> str:
     """Map ``auto`` onto a concrete backend; reject unknown names and an
     explicit ``pallas`` request for a mode with no Pallas body (only
@@ -94,8 +108,8 @@ def matmul(
     x: jax.Array,
     w: jax.Array,
     *,
-    n: int = 8,
-    t: int = 4,
+    n: int | None = None,
+    t: int | None = None,
     fix_to_1: bool = True,
     mode: str = "bitexact",
     rank: int = 8,
@@ -104,11 +118,16 @@ def matmul(
 ) -> jax.Array:
     """Approximate GEMM: x (M, K) @ w (K, N) -> (M, N) f32.
 
+    ``n``/``t`` left ``None`` are resolved by the accuracy-configuration
+    controller (``repro.engine.config``): ``n = DEFAULT_N`` and ``t =
+    default_t(n)``, the balanced tier's cheapest valid split.
+
     Raises ``ValueError`` (listing the valid names) for an unknown
     ``mode`` or ``backend``, for an explicit ``backend="pallas"`` on a
     mode with no Pallas body (only ``auto`` falls back to reference),
     and when a stochastic mode is called without a PRNG ``key``.
     """
+    n, t = _resolve_nt(n, t)
     spec = _modes.get_mode(mode)
     resolved = resolve_backend(backend, spec)
     if spec.needs_key and key is None:
@@ -127,16 +146,18 @@ def multiply(
     a: jax.Array,
     b: jax.Array,
     *,
-    n: int = 8,
-    t: int = 4,
+    n: int | None = None,
+    t: int | None = None,
     approx: bool = True,
     fix_to_1: bool = True,
     backend: str = "auto",
 ) -> jax.Array:
     """Elementwise (approximate) product of uint32 magnitudes, any shape.
 
+    ``n``/``t`` default to the controller's resolution (see ``matmul``).
     Returns the packed 2n-bit product in uint32 (requires 2n <= 31).
     """
+    n, t = _resolve_nt(n, t)
     resolved = resolve_backend(backend)
     if resolved == "pallas":
         from repro.kernels.seqmul_kernel import seqmul_pallas

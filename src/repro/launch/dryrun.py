@@ -90,12 +90,18 @@ def _step_kind(shape) -> str:
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool, *, extra: dict | None = None,
-               accum: int = 1, fsdp: bool = True, approx_mode: str | None = None):
+               accum: int = 1, fsdp: bool = True, approx_mode: str | None = None,
+               quality_tier: str | None = None):
     """Lower + compile one cell; returns the result record."""
     cfg = get_config(arch, **(extra or {}))
+    if approx_mode and quality_tier:
+        raise ValueError("approx_mode and quality_tier are mutually exclusive")
     if approx_mode:
         from repro.configs.registry import apply_approx
         cfg = apply_approx(cfg, mode=approx_mode)
+    elif quality_tier:
+        from repro.configs.registry import apply_quality
+        cfg = apply_quality(cfg, quality_tier)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     model = build_model(cfg)
@@ -180,6 +186,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, *, extra: dict | Non
         "grad_accum": accum if kind == "train" else None,
         "fsdp": fsdp,
         "approx_mode": approx_mode,
+        "quality_tier": quality_tier,
         "ok": True,
         "compile_s": round(time.time() - t0, 1),
         "mem": {
@@ -236,7 +243,13 @@ def main() -> None:
     ap.add_argument("--fsdp", choices=["on", "off"], default="on",
                     help="ZeRO-3 param/opt sharding over the data axis")
     ap.add_argument("--approx-mode", default=None, help="deploy the paper technique")
+    ap.add_argument("--quality-tier", default=None,
+                    help="accuracy tier (engine.config): lower the cell with "
+                         "the controller-resolved per-GEMM-class (n, t, mode)")
     args = ap.parse_args()
+    if args.approx_mode and args.quality_tier:
+        ap.error("--approx-mode and --quality-tier are mutually exclusive "
+                 "(the tier owns the mode)")
 
     cells = []
     if args.all:
@@ -260,7 +273,8 @@ def main() -> None:
                     extra = st.get("extra")
                 rec = lower_cell(arch, sname, mp, extra=extra, accum=accum,
                                  fsdp=args.fsdp == "on",
-                                 approx_mode=args.approx_mode)
+                                 approx_mode=args.approx_mode,
+                                 quality_tier=args.quality_tier)
             except Exception as e:  # noqa: BLE001 — report, continue
                 rec = {
                     "arch": arch, "shape": sname,

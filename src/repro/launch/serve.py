@@ -24,6 +24,7 @@ import jax
 
 from repro.configs.registry import apply_approx, get_config
 from repro.distributed.sharding import data_parallel_mesh
+from repro.engine import config as engine_config
 from repro.engine import modes as engine_modes
 from repro.models.registry import build_model
 from repro.serve import (
@@ -75,6 +76,13 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--approx-mode", default=None, choices=engine_modes.list_modes())
+    ap.add_argument("--quality-tier", default=None,
+                    choices=engine_config.list_tiers(),
+                    help="accuracy tier for the run: the engine.config "
+                         "controller resolves each GEMM class to the cheapest "
+                         "splitting point meeting the tier's error budget; "
+                         "requests are tagged with the tier and checked at "
+                         "admission (mutually exclusive with --approx-mode)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scheduler", default=None,
                     choices=("continuous", "static"),
@@ -94,8 +102,13 @@ def main(argv=None) -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.approx_mode and args.quality_tier:
+        ap.error("--approx-mode and --quality-tier are mutually exclusive "
+                 "(the tier owns the mode)")
     if args.approx_mode:
         cfg = apply_approx(cfg, mode=args.approx_mode)
+    if args.quality_tier:
+        print(f"# {engine_config.resolve_tier(args.quality_tier).describe()}")
 
     scheduler = args.scheduler
     if scheduler is None:
@@ -113,19 +126,20 @@ def main(argv=None) -> None:
         args.requests, prompt_len=args.prompt_len, gen=args.gen,
         vocab_size=cfg.vocab_size, seed=args.seed,
         vary_budget=args.vary_budget, eos_id=args.eos_id,
+        quality=args.quality_tier,
     )
     if scheduler == "continuous":
         mesh = data_parallel_mesh(args.batch) if args.data_parallel else None
         result = continuous_serve_loop(
             model, params, queue,
             batch_size=args.batch, prompt_len=args.prompt_len,
-            max_new=args.gen, mesh=mesh,
+            max_new=args.gen, mesh=mesh, quality=args.quality_tier,
         )
     else:
         result = static_serve_loop(
             model, params, queue,
             batch_size=args.batch, prompt_len=args.prompt_len, gen=args.gen,
-            seed=args.seed,
+            seed=args.seed, quality=args.quality_tier,
         )
     print(result.stats.summary())
     lat = result.stats.request_latencies_s

@@ -48,7 +48,14 @@ def main() -> None:
     ap.add_argument("--approx-mode", default=None, choices=engine_modes.list_modes(),
                     help="deploy the paper technique via a registered engine mode")
     ap.add_argument("--approx-n", type=int, default=8)
-    ap.add_argument("--approx-t", type=int, default=4)
+    ap.add_argument("--approx-t", type=int, default=None,
+                    help="splitting point; default: resolved by the "
+                         "engine.config controller for --approx-n "
+                         "(balanced-tier budget)")
+    ap.add_argument("--quality-tier", default=None,
+                    help="accuracy tier (engine.config): per-GEMM-class "
+                         "(n, t, mode) resolved against the tier's error "
+                         "budgets; mutually exclusive with --approx-mode")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--inject-failures", default="",
@@ -61,8 +68,15 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.approx_mode and args.quality_tier:
+        ap.error("--approx-mode and --quality-tier are mutually exclusive "
+                 "(the tier owns the mode)")
     if args.approx_mode:
         cfg = apply_approx(cfg, n=args.approx_n, t=args.approx_t, mode=args.approx_mode)
+    elif args.quality_tier:
+        from repro.configs.registry import apply_quality
+
+        cfg = apply_quality(cfg, args.quality_tier, n=args.approx_n)
     cfg = dataclasses.replace(cfg, scan_layers=True)
 
     tcfg = TrainConfig(

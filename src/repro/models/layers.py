@@ -119,15 +119,20 @@ def _approx_2d(x2: jax.Array, w: jax.Array, ap: ApproxConfig, key) -> jax.Array:
         mode=ap.mode,
         rank=ap.rank,
         key=_engine_modes.resolve_key(ap.mode, key),
+        backend=ap.backend,
     )
 
 
 def dense(x: jax.Array, w: jax.Array, ctx: Ctx, kind: str = "mlp") -> jax.Array:
     """x: (..., d_in) @ w (d_in, d_out), optionally through the approximate
-    multiplier (paper technique) when ``kind`` is targeted."""
+    multiplier (paper technique) when ``kind`` is targeted.  The effective
+    (n, t, mode, backend) comes from ``approx.for_target(kind)``, so a
+    quality tier's per-GEMM-class selections (engine.config) apply here
+    without the call site knowing about tiers."""
     ap = ctx.cfg.approx
     if not ap.enabled or kind not in ap.targets:
         return jnp.dot(x, w.astype(x.dtype))
+    ap = ap.for_target(kind)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     out = _approx_2d(x2, w, ap, ctx.next_key())

@@ -61,6 +61,10 @@ def _expert_gemm(x: jax.Array, w: jax.Array, ctx: Ctx) -> jax.Array:
     ap = ctx.cfg.approx
     if not ap.enabled or "moe" not in ap.targets:
         return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+    # per-target quality override (engine.config tiers); the backend stays
+    # pinned to "reference" below regardless — pallas bodies don't batch
+    # under this vmap
+    ap = ap.for_target("moe")
     spec = _engine_modes.get_mode(ap.mode)
 
     def one(xe, we, ke=None):

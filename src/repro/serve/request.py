@@ -30,6 +30,12 @@ class Request:
     tokens: np.ndarray  # (L,) int32 prompt token ids, L >= 1
     max_new: int  # generation budget (>= 1)
     eos_id: Optional[int] = None  # retire early on this token, if set
+    # accuracy tier the request was sold at (a repro.engine.config tier
+    # name).  None = whatever the pool runs.  The scheduler checks the
+    # tier against its own resolved engine config at admission — one
+    # pool serves one tier, mismatches are rejected rather than served
+    # at silently different quality.
+    quality: Optional[str] = None
 
     def __post_init__(self):
         if len(self.tokens) < 1:
@@ -65,9 +71,11 @@ def synth_requests(
     min_prompt: int = 4,
     vary_budget: bool = True,
     eos_id: Optional[int] = None,
+    quality: Optional[str] = None,
 ) -> list[Request]:
     """Deterministic mixed workload: prompt lengths in [min_prompt, prompt_len],
-    budgets in [1, gen] (or all ``gen`` when ``vary_budget=False``)."""
+    budgets in [1, gen] (or all ``gen`` when ``vary_budget=False``);
+    ``quality`` tags every request with an accuracy tier name."""
     rng = np.random.default_rng(seed)
     out: list[Request] = []
     for i in range(count):
@@ -79,5 +87,6 @@ def synth_requests(
             tokens=rng.integers(0, vocab_size, size=length).astype(np.int32),
             max_new=budget,
             eos_id=eos_id,
+            quality=quality,
         ))
     return out

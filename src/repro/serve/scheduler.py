@@ -74,6 +74,43 @@ def supports_continuous(cfg) -> bool:
     return not cfg.is_encdec and not has_recurrent_state(cfg)
 
 
+def _apply_pool_quality(model, quality):
+    """Resolve an accuracy tier into this pool's engine config: the
+    ``engine.config`` controller picks each GEMM class's cheapest valid
+    splitting point and the model is rebuilt on the resulting config
+    (parameters are unaffected — approximation only changes the forward
+    math).  Returns ``(model, canonical_tier_name)``."""
+    if quality is None:
+        return model, None
+    from repro.engine import config as engine_config
+    from repro.models.registry import build_model
+
+    tier = engine_config.get_tier(quality)
+    return build_model(engine_config.apply_quality(model.cfg, tier)), tier.name
+
+
+def _check_request_quality(req: Request, pool_tier) -> None:
+    """A request sold at a tier must be served by a pool resolved to that
+    tier — mismatches raise at admission instead of silently serving the
+    request at a different accuracy."""
+    if req.quality is None:
+        return
+    from repro.engine.config import get_tier
+
+    want = get_tier(req.quality).name
+    if pool_tier is None:
+        raise ValueError(
+            f"request {req.id} demands quality tier {want!r}, but this pool "
+            f"was built without one (pass quality={want!r}, or run one pool "
+            f"per tier)"
+        )
+    if want != pool_tier:
+        raise ValueError(
+            f"request {req.id} demands quality tier {want!r}, but this pool "
+            f"serves {pool_tier!r}; run one pool per tier"
+        )
+
+
 def _scatter_row(big: dict, small: dict, row) -> dict:
     """Write the single-row cache pytree ``small`` into row ``row`` of ``big``.
 
@@ -138,10 +175,18 @@ class ContinuousScheduler:
       mesh: optional device mesh (e.g. ``sharding.data_parallel_mesh()``)
         installed around every jitted call — the model's internal
         ``constrain`` rules then shard the pool batch over the data axis.
+      quality: optional accuracy tier (a ``repro.engine.config`` tier
+        name or ``QualityTier``).  The tier is resolved to a per-run
+        engine config — the controller picks each GEMM class's cheapest
+        splitting point meeting the tier's error budget — and the model
+        is rebuilt on that config; the decode/prefill steps jit once
+        against it.  Requests carrying a ``quality`` are checked against
+        the pool's tier at admission: a mismatch raises rather than
+        silently serving the request at a different accuracy.
     """
 
     def __init__(self, model, params, *, batch_size: int, prompt_len: int,
-                 max_new: int, mesh=None):
+                 max_new: int, mesh=None, quality=None):
         if model.cfg.is_encdec:
             raise ValueError(
                 "ContinuousScheduler supports decoder-only families; "
@@ -149,6 +194,7 @@ class ContinuousScheduler:
             )
         if batch_size < 1 or prompt_len < 1 or max_new < 1:
             raise ValueError("batch_size, prompt_len and max_new must be >= 1")
+        model, self.quality = _apply_pool_quality(model, quality)
         # recurrent-state layers integrate left pads into their state
         # (positions cannot mask them out), so padded admission would be
         # silently wrong — enforced per request in _pad
@@ -195,6 +241,7 @@ class ContinuousScheduler:
 
     def _pad(self, req: Request) -> tuple:
         """Left-pad one prompt into the bucket; true position ids for pads < 0."""
+        _check_request_quality(req, self.quality)
         ln = req.prompt_len
         if ln > self.prompt_len:
             raise ValueError(
@@ -352,6 +399,7 @@ class ContinuousScheduler:
             slot_utilization=busy_row_steps / (B * step) if step else 1.0,
             ttft_s=tuple(r.ttft_s for r in retired),
             request_latencies_s=tuple(r.latency_s for r in retired),
+            quality=self.quality or "",
         )
         return ServeResult(stats=stats, request_stats=tuple(retired), outputs=outputs)
 
@@ -359,12 +407,13 @@ class ContinuousScheduler:
 def continuous_serve_loop(
     model, params, requests: Sequence[Request], *,
     batch_size: int, prompt_len: int, max_new: int,
-    mesh=None, warmup: bool = True,
+    mesh=None, warmup: bool = True, quality=None,
 ) -> ServeResult:
     """One-shot convenience wrapper over :class:`ContinuousScheduler`."""
     sched = ContinuousScheduler(
         model, params,
         batch_size=batch_size, prompt_len=prompt_len, max_new=max_new, mesh=mesh,
+        quality=quality,
     )
     return sched.run(requests, warmup=warmup)
 
@@ -383,7 +432,7 @@ def _static_steps(model, max_seq: int, mem_len: int):
 def static_serve_loop(
     model, params, requests: Sequence[Request], *,
     batch_size: int, prompt_len: int, gen: int,
-    seed: int = 0, warmup: bool = True,
+    seed: int = 0, warmup: bool = True, quality=None,
 ) -> ServeResult:
     """The pre-continuous static-batch loop, kept as baseline and oracle.
 
@@ -394,7 +443,10 @@ def static_serve_loop(
     Finished rows burn dead decode steps until then; ``tokens_out``
     counts useful (budget/EOS-bounded) tokens only, so the throughput
     numbers are directly comparable with the continuous scheduler's.
+    ``quality`` resolves an accuracy tier exactly as the continuous
+    scheduler does, so per-tier parity holds bit for bit.
     """
+    model, pool_tier = _apply_pool_quality(model, quality)
     cfg = model.cfg
     max_seq = prompt_len + gen
     mem_len = prompt_len if cfg.is_encdec else 0
@@ -409,6 +461,7 @@ def static_serve_loop(
         b = len(batch_reqs)
         toks = np.zeros((b, prompt_len), np.int32)
         for i, r in enumerate(batch_reqs):
+            _check_request_quality(r, pool_tier)
             if r.prompt_len > prompt_len:
                 raise ValueError(
                     f"request {r.id}: prompt length {r.prompt_len} exceeds bucket {prompt_len}"
@@ -508,5 +561,6 @@ def static_serve_loop(
         ),
         ttft_s=tuple(r.ttft_s for r in retired),
         request_latencies_s=tuple(r.latency_s for r in retired),
+        quality=pool_tier or "",
     )
     return ServeResult(stats=stats, request_stats=tuple(retired), outputs=outputs)

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.serve.request import RequestStats
 
-__all__ = ["ServeStats", "ServeResult", "percentile"]
+__all__ = ["ServeStats", "ServeResult", "percentile", "fmt_ms"]
 
 
 def percentile(values, q: float) -> float:
@@ -28,6 +28,16 @@ def percentile(values, q: float) -> float:
     if not vals:
         return 0.0
     return float(np.percentile(np.asarray(vals, np.float64), q))
+
+
+def fmt_ms(values, q: float) -> str:
+    """``percentile`` rendered as milliseconds — ``"n/a"`` for an empty
+    distribution instead of a misleading ``0ms`` (the empty-input 0.0 of
+    ``percentile`` is a sentinel, not a measurement)."""
+    vals = list(values)
+    if not vals:
+        return "n/a"
+    return f"{percentile(vals, q) * 1e3:.0f}ms"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +56,7 @@ class ServeStats:
     slot_utilization: float = 1.0  # mean fraction of live rows per decode step
     ttft_s: tuple = ()  # per-request time-to-first-token
     request_latencies_s: tuple = ()  # per-request end-to-end latency
+    quality: str = ""  # accuracy tier the pool was resolved to ("" = none)
 
     @property
     def tokens_per_s(self) -> float:
@@ -60,13 +71,14 @@ class ServeStats:
         if self.scheduler == "continuous":
             extra = (
                 f", {self.slot_utilization:.0%} slot util, "
-                f"ttft p50 {percentile(self.ttft_s, 50) * 1e3:.0f}ms"
+                f"ttft p50 {fmt_ms(self.ttft_s, 50)}"
             )
+        tier = f" [tier {self.quality}]" if self.quality else ""
         return (
             f"[{self.scheduler}] served {self.requests} requests, "
             f"{self.tokens_out} tokens in {self.wall_s:.2f}s "
             f"({self.tokens_per_s:.1f} tok/s on {self.devices} device(s))"
-            + extra
+            + extra + tier
         )
 
 

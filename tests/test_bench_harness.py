@@ -17,6 +17,7 @@ EXPECTED_SUITES = {
     "engine_matmul",
     "fig2_error_metrics",
     "fig3_latency_area",
+    "accuracy_pareto",
     "gemm_modes",
     "roofline",
     "serve_throughput",

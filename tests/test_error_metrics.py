@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import error_metrics, error_model
+from repro.core import boolean_ref, error_metrics, error_model
 
 
 @pytest.mark.parametrize("n,t", [(4, 2), (6, 3), (8, 4), (8, 2)])
@@ -77,3 +77,55 @@ def test_estimator_biased_inputs():
     high = error_model.estimate(n, t, pa=np.full(n, 0.8), pb=np.full(n, 0.8))
     assert low.er_msp < high.er_msp
     assert low.med_abs_est < high.med_abs_est
+
+
+@pytest.mark.parametrize("bad_call", [
+    lambda: error_model.estimate(8, 0),
+    lambda: error_model.estimate(8, 8),
+    lambda: error_model.estimate(0, 1),
+    lambda: error_model.estimate(33, 4),
+    lambda: error_model.estimate(8, 4, pa=np.full(7, 0.5)),
+    lambda: error_model.estimate(8, 4, pb=np.full(9, 0.5)),
+    lambda: error_model.estimate(8, 4, pa=np.full(8, 1.5)),
+    lambda: error_model.mae_closed_form(8, 0),
+    lambda: error_model.max_ed_dropped_carry(8, 8),
+])
+def test_estimate_rejects_invalid_shapes(bad_call):
+    """The estimator routes (n, t) through engine.recurrence.validate_nt
+    and checks the marginal vectors — the invalid (n, t, pa, pb) it used
+    to silently accept (t=0 wrapped pa[-1]; t>n reported a 0.0 LSP
+    carry-out) now raise."""
+    with pytest.raises(ValueError):
+        bad_call()
+
+
+def test_estimate_degenerate_n1_is_exact():
+    """n=1, t=1 (the split validate_nt accepts since PR 3): single-cycle
+    product, no carry to defer — every error metric is exactly zero, and
+    mae_closed_form's explicit degenerate value replaces the raw
+    formula's negative 2^{n+t-1} - 2^{t+1} = -2."""
+    est = error_model.estimate(1, 1)
+    assert est.er_msp == 0.0
+    assert est.p_fix == 0.0
+    assert est.med_abs_est == 0.0
+    assert error_model.mae_closed_form(1, 1) == 0
+    assert error_model.max_ed_dropped_carry(1, 1) == 0
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4])
+def test_mae_closed_form_matches_boolean_enumeration(n):
+    """Eq. 11 (and its explicit degenerate-case values) against exhaustive
+    enumeration via the literal boolean reference: the closed form is the
+    maximum *overshoot* (most negative ED) of the fix-disabled design —
+    including the degenerate n=1 (exact) and n=2, t=1 (0) splits."""
+    vals = np.arange(1 << n, dtype=np.uint64)
+    a, b = [g.ravel() for g in np.meshgrid(vals, vals)]
+    for t in range(1, max(1, n - 1) + 1):
+        mae = error_model.mae_closed_form(n, t)
+        assert mae >= 0
+        phat = boolean_ref.int_from_bits(boolean_ref.mul_approx_bits(
+            boolean_ref.bits_from_int(a, n), boolean_ref.bits_from_int(b, n),
+            t=t, fix_to_1=False,
+        ))
+        ed = (a * b).astype(np.int64) - phat.astype(np.int64)
+        assert int(-ed.min(initial=0)) == mae

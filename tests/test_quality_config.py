@@ -1,0 +1,163 @@
+"""Accuracy-configuration subsystem (repro.engine.config): the (n, t)
+controller, quality tiers, and the hardened estimator contracts.
+
+Direction note (pinned here so nobody "fixes" it backwards): in the
+paper's segmented design a *larger* t defers a *heavier* carry (weight
+2^t), so the error-magnitude metrics grow with t — Eq. 11's MAE and the
+closed-form NMED estimate are strictly increasing in t, and the
+measured ER is non-monotone (it does decrease on the tail toward
+t = n-1, but rises first).  This is the opposite of truncation-style
+approximate multipliers where widening the exact LSP reduces error.
+The controller therefore treats a budget as selecting the lower
+interval [1, t_max] of valid splits and returns the cheapest by cycle
+delay, ties toward the more accurate (smaller) split.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import error_metrics, error_model
+from repro.engine import config as engine_config
+from repro.engine.config import ErrorBudget, QualityError
+
+
+# ------------------------------------------------------------- estimator
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_closed_form_metrics_monotone_in_t(n):
+    """The controller's budget scale: NMED estimate and Eq. 11 MAE grow
+    strictly with t — each budget therefore selects a unique t_max."""
+    points = engine_config.sweep_t(n)
+    assert [p.t for p in points] == list(range(1, n))
+    for a, b in zip(points, points[1:]):
+        assert a.nmed_est < b.nmed_est
+        assert a.mae < b.mae
+        assert 0.0 < a.er_bound <= 1.0
+
+
+@pytest.mark.parametrize("n,t", [(4, 1), (4, 3), (6, 3), (8, 2), (8, 7)])
+def test_er_bound_upper_bounds_measured_er(n, t):
+    """er_msp is an *upper* estimate: a budget met in closed form is met
+    by the exhaustively measured design."""
+    est = error_model.estimate(n, t)
+    rep = error_metrics.exhaustive_eval(n, t, fix_to_1=True)
+    assert rep.er <= est.er_msp
+
+
+def test_er_msp_decreases_on_the_tail():
+    """The measured/estimated ER does fall off toward t = n-1 (the MSP
+    shrinks, fewer cycles can observe the deferral) — the tail of the
+    non-monotone ER curve, not a global monotonicity."""
+    points = engine_config.sweep_t(8)
+    ers = [p.er_bound for p in points]
+    peak = ers.index(max(ers))
+    assert all(x >= y for x, y in zip(ers[peak:], ers[peak + 1:]))
+
+
+# ------------------------------------------------------------ controller
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_controller_returns_cheapest_valid_t(n):
+    """Brute-force cross-check: for a ladder of budgets, resolve_t returns
+    exactly min over the valid set by (cycle_delay, t) — and since the
+    NMED scale is strictly increasing, for budgets binding at or below
+    the delay-optimal split that is the unique cheapest (maximal) valid
+    t, i.e. the minimal-delay t whose closed-form bound meets the
+    target."""
+    points = engine_config.sweep_t(n)
+    for cut in points:
+        budget = ErrorBudget(max_nmed=cut.nmed_est)
+        valid = [p for p in points if p.nmed_est <= cut.nmed_est]
+        expect = min(valid, key=lambda p: (p.delay, p.t))
+        got = engine_config.resolve_t(n, budget)
+        assert got.t == expect.t
+        assert got.nmed_est <= cut.nmed_est  # the bound is actually met
+        if max(p.t for p in valid) <= n // 2:
+            # budget binds at/below the delay-optimal split: the unique
+            # cheapest valid split is the maximal one
+            assert got.t == max(p.t for p in valid)
+
+
+def test_controller_tight_budget_returns_t1_and_impossible_raises():
+    assert engine_config.resolve_t(8, ErrorBudget(max_nmed=5e-4)).t == 1
+    with pytest.raises(QualityError):
+        engine_config.resolve_t(8, ErrorBudget(max_nmed=1e-9))
+    with pytest.raises(QualityError):
+        engine_config.resolve_t(8, ErrorBudget(max_er=1e-6))
+
+
+def test_controller_mae_budget():
+    """An Eq. 11 budget behaves like the NMED one (same monotone scale)."""
+    got = engine_config.resolve_t(8, ErrorBudget(max_mae=error_model.mae_closed_form(8, 3)))
+    assert got.t == 3  # t=4 would be cheaper but violates the MAE budget
+
+
+def test_default_t_is_the_derived_legacy_default():
+    """The historical hardcoded n=8, t=4 is now the balanced tier's
+    controller resolution."""
+    assert engine_config.default_t(8) == 4
+    from repro.configs.base import ApproxConfig
+
+    ap = ApproxConfig()
+    assert (ap.n, ap.t) == (engine_config.DEFAULT_N, engine_config.default_t(8))
+
+
+def test_measured_marginals_shift_the_resolution():
+    """Low-activity operands (paper: measured input PDFs) defer fewer
+    carries, so the same budget affords a larger (cheaper) split."""
+    budget = ErrorBudget(max_nmed=2e-3)
+    uniform = engine_config.resolve_t(8, budget)
+    quiet = engine_config.resolve_t(
+        8, budget, pa=np.full(8, 0.1), pb=np.full(8, 0.1)
+    )
+    assert quiet.t >= uniform.t
+
+
+# ----------------------------------------------------------------- tiers
+def test_tier_registry_and_resolutions():
+    tiers = engine_config.list_tiers()
+    for name in ("exact", "high", "balanced", "draft"):
+        assert name in tiers
+    balanced = engine_config.resolve_tier("balanced")
+    by_target = {q.target: q for q in balanced.per_target}
+    assert by_target["mlp"].t == 4  # the derived legacy default
+    assert by_target["attn"].t < by_target["mlp"].t  # attention is tighter
+    high = engine_config.resolve_tier("high")
+    for q in high.per_target:
+        assert q.t <= by_target[q.target].t  # higher quality, smaller splits
+    with pytest.raises(ValueError, match="unknown quality tier"):
+        engine_config.get_tier("ultra-mega")
+
+
+def test_apply_quality_installs_per_target_overrides():
+    from repro.configs.registry import apply_quality, get_config
+
+    cfg = apply_quality(get_config("qwen3-0.6b").reduced(), "balanced")
+    ap = cfg.approx
+    assert ap.enabled and ap.mode == "bitexact"
+    assert set(ap.targets) == {"mlp", "attn", "moe"}
+    assert ap.for_target("mlp").t == 4
+    assert ap.for_target("attn").t == 2
+    # resolved override carries no further overrides (no recursion)
+    assert ap.for_target("attn").overrides == ()
+    # a kind with no override inherits the base config unchanged
+    assert ap.for_target("head") == ap
+    exact = apply_quality(cfg, "exact")
+    assert not exact.approx.enabled
+
+
+def test_engine_matmul_defaults_resolve_via_controller():
+    import jax.numpy as jnp
+
+    from repro import engine
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    default = engine.matmul(x, w, mode="bitexact")
+    explicit = engine.matmul(x, w, n=8, t=4, mode="bitexact")
+    np.testing.assert_array_equal(np.asarray(default), np.asarray(explicit))
+    a = jnp.asarray([3, 5], jnp.uint32)
+    b = jnp.asarray([7, 11], jnp.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(engine.multiply(a, b)),
+        np.asarray(engine.multiply(a, b, n=8, t=4)),
+    )

@@ -191,6 +191,92 @@ def test_encdec_rejected():
         ContinuousScheduler(model, params=None, batch_size=1, prompt_len=4, max_new=2)
 
 
+def test_quality_tier_parity_and_stats(served):
+    """Per-tier serving: the pool resolves the tier to an engine config
+    (controller-selected per-GEMM-class splits) and the continuous
+    scheduler still bit-matches the static loop at that tier."""
+    cfg, model, params = served
+    rng = np.random.default_rng(13)
+    queue = [
+        Request(id=i, tokens=rng.integers(0, cfg.vocab_size, PROMPT).astype(np.int32),
+                max_new=GEN, quality="balanced")
+        for i in range(2)
+    ]
+    static = static_serve_loop(
+        model, params, queue, batch_size=2, prompt_len=PROMPT, gen=GEN,
+        warmup=False, quality="balanced",
+    )
+    cont = continuous_serve_loop(
+        model, params, queue, batch_size=2, prompt_len=PROMPT, max_new=GEN,
+        warmup=False, quality="balanced",
+    )
+    assert static.stats.quality == cont.stats.quality == "balanced"
+    assert "tier balanced" in cont.stats.summary()
+    for r in queue:
+        np.testing.assert_array_equal(
+            static.outputs[r.id], cont.outputs[r.id],
+            err_msg=f"request {r.id}: tier-resolved continuous diverged from static",
+        )
+    # the tier actually changes the computation vs the unconfigured pool
+    plain = continuous_serve_loop(
+        model, params,
+        [Request(id=r.id, tokens=r.tokens, max_new=r.max_new) for r in queue],
+        batch_size=2, prompt_len=PROMPT, max_new=GEN, warmup=False,
+    )
+    assert any(
+        not np.array_equal(plain.outputs[r.id], cont.outputs[r.id]) for r in queue
+    ), "balanced tier produced bit-identical streams to the exact pool"
+
+
+def test_quality_tier_mismatch_rejected_at_admission(served):
+    cfg, model, params = served
+    req_high = Request(id=0, tokens=np.zeros(4, np.int32), max_new=1, quality="high")
+    with pytest.raises(ValueError, match="serves 'balanced'"):
+        continuous_serve_loop(
+            model, params, [req_high], batch_size=1, prompt_len=PROMPT,
+            max_new=GEN, warmup=False, quality="balanced",
+        )
+    with pytest.raises(ValueError, match="without one"):
+        continuous_serve_loop(
+            model, params, [req_high], batch_size=1, prompt_len=PROMPT,
+            max_new=GEN, warmup=False,
+        )
+    with pytest.raises(ValueError, match="unknown quality tier"):
+        ContinuousScheduler(
+            model, params, batch_size=1, prompt_len=PROMPT, max_new=GEN,
+            quality="no-such-tier",
+        )
+    # untagged requests ride on any pool; tagged ones match their pool
+    ok = continuous_serve_loop(
+        model, params,
+        [Request(id=1, tokens=np.zeros(4, np.int32), max_new=1),
+         Request(id=2, tokens=np.zeros(4, np.int32), max_new=1, quality="high")],
+        batch_size=1, prompt_len=PROMPT, max_new=GEN, warmup=False, quality="high",
+    )
+    assert ok.stats.requests == 2
+
+
+def test_empty_distribution_summary_renders_na():
+    """percentile() returns 0.0 on empty input — summary() must say n/a,
+    not a misleading 'ttft p50 0ms', when nothing retired."""
+    from repro.serve.stats import ServeStats, fmt_ms
+
+    empty = ServeStats(
+        requests=0, tokens_out=0, wall_s=0.0, prefill_s=0.0, decode_s=0.0,
+        batch_latencies_s=(), devices=1, scheduler="continuous",
+    )
+    assert "ttft p50 n/a" in empty.summary()
+    assert "0ms" not in empty.summary()
+    assert fmt_ms((), 50) == "n/a"
+    assert fmt_ms((0.1,), 50) == "100ms"
+    full = ServeStats(
+        requests=1, tokens_out=1, wall_s=1.0, prefill_s=0.0, decode_s=1.0,
+        batch_latencies_s=(), devices=1, scheduler="continuous",
+        ttft_s=(0.25,),
+    )
+    assert "ttft p50 250ms" in full.summary()
+
+
 def test_data_parallel_mesh_helper():
     from repro.distributed.sharding import data_parallel_mesh
 
