@@ -127,8 +127,12 @@ register_suite(Suite(
                 "TTFT and per-request latency percentiles",
     key_fields=("table", "arch", "approx_mode", "scheduler", "batch_size",
                 "prompt_len", "gen"),
-    lower_is_better=("request_latency_s_p50",),
-    higher_is_better=("tokens_per_s", "slot_utilization"),
+    # Gate on metrics that survive shared-runner noise: slot_utilization is
+    # deterministic for a fixed queue, and speedup_vs_static is a within-run
+    # ratio so host-load noise largely cancels.  Absolute tokens_per_s /
+    # latency percentiles swing ~2x run-over-run on loaded CPU hosts — they
+    # are recorded for trajectory plots but not gated (docs/benchmarks.md).
+    higher_is_better=("slot_utilization", "speedup_vs_static"),
 ))
 
 

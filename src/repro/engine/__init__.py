@@ -39,7 +39,10 @@ _LAZY = {
     "GemmParams": "modes",
     "quantize_operands": "modes",
     "bitexact_gemm_int": "modes",
+    "seqmul_gemm_int": "modes",
     "resolve_t": "config",
+    "kernel_tiles": "config",
+    "KernelTiles": "config",
     "resolve_tier": "config",
     "apply_quality": "config",
     "list_tiers": "config",

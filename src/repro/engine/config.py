@@ -66,6 +66,8 @@ __all__ = [
     "resolve_t",
     "DEFAULT_N",
     "default_t",
+    "KernelTiles",
+    "kernel_tiles",
     "QualityTier",
     "QualityConfig",
     "register_tier",
@@ -208,6 +210,53 @@ def resolve_t(
 
 
 DEFAULT_N = 8  # LUT-backed modes require n <= 8; the engine-wide default
+
+
+# ------------------------------------------------- fused-kernel parameters
+@dataclasses.dataclass(frozen=True)
+class KernelTiles:
+    """Blocked-kernel tile sizes for one fused GEMM call.
+
+    ``bm``/``bn``/``bk`` are the (M, N, K) block extents of the
+    (M/BM, N/BN, K/BK) reduction grid every fused Pallas GEMM in
+    ``repro.kernels`` uses.  Resolved per call by :func:`kernel_tiles`
+    from the mode and the controller-chosen (n, t) — this is how a
+    :class:`~repro.configs.base.LayerQuality` selection turns into
+    concrete fused-kernel launch parameters instead of an outer loop
+    around generic kernels.
+    """
+
+    bm: int
+    bn: int
+    bk: int
+
+
+# VMEM sizing (docs/kernels.md has the full table):
+#  * seqmul keeps ~6 live uint32 (BM, BK, BN) cubes -> cube edge 32
+#    (~768 KiB) fits every n; n <= 4 halves the LUT-free live set so a
+#    48-edge cube (~2.5 MiB) still fits and quarters the grid overhead.
+#  * lut pins the (2^n, 2^n) table (256 KiB at n=8) + the (BM, BK, BN)
+#    gather cube -> 64 tiles (~6 MiB live worst case).
+#  * lowrank/packed are pure MXU dot kernels -> 128 tiles.
+_SEQMUL_TILES_SMALL_N = KernelTiles(bm=48, bn=48, bk=48)
+_SEQMUL_TILES = KernelTiles(bm=32, bn=32, bk=32)
+_LUT_TILES = KernelTiles(bm=64, bn=64, bk=64)
+_MXU_TILES = KernelTiles(bm=128, bn=128, bk=128)
+
+
+def kernel_tiles(mode: str, n: int, t: int) -> KernelTiles:
+    """Fused-kernel tile selection for a (mode, n, t) GEMM call.
+
+    The splitting point ``t`` does not change the VMEM footprint (both
+    split words live regardless of where the cut sits), so tiles depend
+    on the mode's live-set shape and the bit-width; ``t`` itself enters
+    the kernel *body* (the in-tile recurrence / the LUT contents).
+    """
+    if mode == "seqmul":
+        return _SEQMUL_TILES_SMALL_N if n <= 4 else _SEQMUL_TILES
+    if mode == "bitexact":
+        return _LUT_TILES
+    return _MXU_TILES
 
 
 @functools.lru_cache(maxsize=64)

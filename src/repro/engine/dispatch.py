@@ -50,6 +50,35 @@ def _resolve_nt(n, t):
     return n, t
 
 
+# Per-mode bit-width ceilings, validated *eagerly* at dispatch time (the
+# kernels historically raised only inside their jitted wrappers, i.e. at
+# trace time deep in a model stack).  The limits are structural:
+#   bitexact  — gathers a (2^n, 2^n) product LUT (4^n entries).
+#   seqmul    — assembles 2n-bit products in f32 (exact for 2n <= 24).
+#   inject    — packs quantized magnitudes into int16 lanes (|q| < 2^15).
+#   fakequant — symmetric int quantization in f32 (exact for n <= 23).
+_MODE_MAX_N = {"bitexact": 8, "lowrank": 8, "seqmul": 12, "inject": 15, "fakequant": 23}
+
+PACKED_U32_MAX_2N = 31  # packed single-word product limit (engine.multiply)
+
+
+def _validate_mode_nt(mode: str, n: int, t: int) -> None:
+    """Eager (n, t) validation with the mode named in the error."""
+    from repro.engine.recurrence import validate_nt
+
+    try:
+        validate_nt(n, t)
+    except ValueError as e:
+        raise ValueError(f"mode {mode!r}: {e}") from None
+    max_n = _MODE_MAX_N.get(mode)
+    if max_n is not None and n > max_n:
+        raise ValueError(
+            f"mode {mode!r} supports bit-widths n <= {max_n}, got n={n} "
+            f"(use mode='seqmul' up to n=12; wider operands go through "
+            f"kernels.seqmul_kernel.seqmul_pallas_words)"
+        )
+
+
 def resolve_backend(backend: str, spec: _modes.ModeSpec | None = None) -> str:
     """Map ``auto`` onto a concrete backend; reject unknown names and an
     explicit ``pallas`` request for a mode with no Pallas body (only
@@ -129,12 +158,19 @@ def matmul(
     """
     n, t = _resolve_nt(n, t)
     spec = _modes.get_mode(mode)
+    _validate_mode_nt(mode, n, t)
     resolved = resolve_backend(backend, spec)
     if spec.needs_key and key is None:
         raise ValueError(f"mode {mode!r} needs a PRNG key")
     x = jnp.asarray(x, jnp.float32)
     w = jnp.asarray(w, jnp.float32)
-    p = _modes.GemmParams(n=n, t=t, fix_to_1=fix_to_1, rank=rank)
+    from repro.engine import config as _config
+
+    tiles = _config.kernel_tiles(mode, n, t)
+    p = _modes.GemmParams(
+        n=n, t=t, fix_to_1=fix_to_1, rank=rank,
+        tiles=(tiles.bm, tiles.bn, tiles.bk),
+    )
     extra = spec.prepare(x, w, p, key) if spec.prepare is not None else ()
     impl = spec.pallas if resolved == "pallas" else spec.reference
     if spec.differentiable:
@@ -158,6 +194,15 @@ def multiply(
     Returns the packed 2n-bit product in uint32 (requires 2n <= 31).
     """
     n, t = _resolve_nt(n, t)
+    mode_name = "seqmul_approx" if approx else "seqmul_exact"
+    _validate_mode_nt(mode_name, n, t)
+    if 2 * n > PACKED_U32_MAX_2N:
+        raise ValueError(
+            f"multiply (mode {mode_name!r}) packs the 2n-bit product into one "
+            f"uint32, which requires 2n <= {PACKED_U32_MAX_2N} (got n={n}, "
+            f"2n={2 * n}); use kernels.seqmul_kernel.seqmul_pallas_words for "
+            f"the two-word (low, high) output at n up to 16"
+        )
     resolved = resolve_backend(backend)
     if resolved == "pallas":
         from repro.kernels.seqmul_kernel import seqmul_pallas

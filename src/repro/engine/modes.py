@@ -12,6 +12,10 @@ Built-in modes
 ``bitexact``   every scalar product is the paper's approximate multiplier,
                via the (2^n, 2^n) product LUT (n <= 8): faithful
                semantics; gather-bound on the VPU, LUT kernel on TPU.
+``seqmul``     the split-word recurrence itself fused into the blocked
+               GEMM tile loop (`kernels.seqmul_matmul`): no LUT, so any
+               n <= 12 — the path that runs the paper's 16-bit-family
+               configurations the (2^n)^2 tables cannot reach.
 ``lowrank``    exact matmul + rank-r SVD correction of the error table —
                both terms run on the MXU.  Beyond-paper optimization.
 ``inject``     exact matmul + moment-matched Gaussian error injection
@@ -35,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantization
-from repro.engine import artifacts
+from repro.engine import artifacts, recurrence
 
 __all__ = [
     "GemmParams",
@@ -46,16 +50,24 @@ __all__ = [
     "resolve_key",
     "quantize_operands",
     "bitexact_gemm_int",
+    "seqmul_gemm_int",
 ]
 
 
 class GemmParams(NamedTuple):
-    """Static configuration threaded to every mode body."""
+    """Static configuration threaded to every mode body.
+
+    ``tiles`` is the fused-kernel (bm, bn, bk) block selection resolved
+    by ``engine.config.kernel_tiles`` at dispatch time (``None`` lets
+    each kernel use its module default) — the hook through which a
+    quality tier's ``LayerQuality`` becomes concrete launch parameters.
+    """
 
     n: int
     t: int
     fix_to_1: bool
     rank: int
+    tiles: Optional[tuple] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,6 +179,14 @@ def _bitexact_ref(x, w, p):
     return acc * scale
 
 
+def _tile_kw(p):
+    """Fused-kernel launch overrides from the dispatch-resolved tiles."""
+    if p.tiles is None:
+        return {}
+    bm, bn, bk = p.tiles
+    return {"bm": bm, "bn": bn, "bk": bk}
+
+
 def _bitexact_pallas(x, w, p):
     from repro.kernels.lut_matmul import lut_matmul_pallas
 
@@ -178,6 +198,62 @@ def _bitexact_pallas(x, w, p):
         mw,
         sw.astype(jnp.float32),
         n=p.n,
+        **_tile_kw(p),
+    )
+    return out * scale
+
+
+# ---- seqmul: the recurrence itself as a blocked GEMM (no LUT, any n <= 12)
+def seqmul_gemm_int(
+    mag_a: jax.Array,
+    sign_a: jax.Array,
+    mag_b: jax.Array,
+    sign_b: jax.Array,
+    *,
+    n: int,
+    t: int,
+    approx: bool = True,
+    fix_to_1: bool = True,
+) -> jax.Array:
+    """Reference oracle for the fused seqmul GEMM: run the split-word
+    recurrence on the full (M, K, N) outer-product cube in jnp and
+    reduce.  O(M·K·N) intermediate — the flatten-everything layout the
+    fused kernel exists to avoid; kept as the bit-exact oracle."""
+    m_dim, k_dim = mag_a.shape
+    n_dim = mag_b.shape[1]
+    a3 = jnp.broadcast_to(jnp.asarray(mag_a, jnp.uint32)[:, :, None], (m_dim, k_dim, n_dim))
+    b3 = jnp.broadcast_to(jnp.asarray(mag_b, jnp.uint32)[None, :, :], (m_dim, k_dim, n_dim))
+    lo, s_lsp, s_msp, _ = recurrence.seqmul_recurrence(
+        a3, b3, n=n, t=t, approx=approx, fix_to_1=fix_to_1
+    )
+    prod = lo.astype(jnp.float32) + jnp.float32(1 << (n - 1)) * (
+        s_lsp.astype(jnp.float32) + jnp.float32(1 << t) * s_msp.astype(jnp.float32)
+    )
+    signed = prod * (
+        sign_a.astype(jnp.float32)[:, :, None] * sign_b.astype(jnp.float32)[None, :, :]
+    )
+    return signed.sum(axis=1)
+
+
+def _seqmul_ref(x, w, p):
+    (mx, sx), (mw, sw), scale = quantize_operands(x, w, p.n)
+    acc = seqmul_gemm_int(mx, sx, mw, sw, n=p.n, t=p.t, fix_to_1=p.fix_to_1)
+    return acc * scale
+
+
+def _seqmul_pallas(x, w, p):
+    from repro.kernels.seqmul_matmul import seqmul_matmul_pallas
+
+    (mx, sx), (mw, sw), scale = quantize_operands(x, w, p.n)
+    out = seqmul_matmul_pallas(
+        mx,
+        sx.astype(jnp.float32),
+        mw,
+        sw.astype(jnp.float32),
+        n=p.n,
+        t=p.t,
+        fix_to_1=p.fix_to_1,
+        **_tile_kw(p),
     )
     return out * scale
 
@@ -205,7 +281,7 @@ def _lowrank_pallas(x, w, p):
     ax = mx.astype(jnp.float32) * sx.astype(jnp.float32)
     aw = mw.astype(jnp.float32) * sw.astype(jnp.float32)
     ue, ve = _lowrank_embed(mx, sx, mw, sw, p)
-    out = lowrank_matmul_pallas(ax, aw, ue, ve, rank=p.rank)
+    out = lowrank_matmul_pallas(ax, aw, ue, ve, rank=p.rank, **_tile_kw(p))
     return out * scale
 
 
@@ -224,6 +300,23 @@ def _inject_ref(x, w, p, noise):
     ax = mx.astype(jnp.float32) * sx.astype(jnp.float32)
     aw = mw.astype(jnp.float32) * sw.astype(jnp.float32)
     return (ax @ aw + noise) * scale
+
+
+def _inject_pallas(x, w, p, noise):
+    """Draft-tier fast path: the quantized exact GEMM runs int-packed
+    (two int16 K-lanes per uint32 — half the operand bytes of f32)
+    before the moment-matched noise is applied.  Integer-exact, so it
+    bit-matches the reference body (asserted in the fused parity sweep).
+    """
+    from repro.kernels.packed_matmul import pack_i16_pairs, packed_matmul_pallas
+
+    (mx, sx), (mw, sw), scale = quantize_operands(x, w, p.n)
+    qa = mx.astype(jnp.int32) * sx.astype(jnp.int32)
+    qw = mw.astype(jnp.int32) * sw.astype(jnp.int32)
+    pa = pack_i16_pairs(qa, axis=1)
+    pb = pack_i16_pairs(qw, axis=0)
+    out = packed_matmul_pallas(pa, pb, **_tile_kw(p))
+    return (out + noise) * scale
 
 
 def _fakequant_ref(x, w, p):
@@ -252,9 +345,17 @@ register_mode(ModeSpec(
     description="exact GEMM + rank-r SVD error correction (MXU-friendly)",
 ))
 register_mode(ModeSpec(
+    name="seqmul",
+    reference=_seqmul_ref,
+    pallas=_seqmul_pallas,
+    differentiable=False,
+    description="paper recurrence fused into the GEMM tile loop (no LUT, n <= 12)",
+))
+register_mode(ModeSpec(
     name="inject",
     reference=_inject_ref,
     prepare=_inject_prepare,
+    pallas=_inject_pallas,
     needs_key=True,
     differentiable=False,
     description="moment-matched stochastic error injection (O(1) at scale)",

@@ -1,0 +1,466 @@
+"""Pallas flash attention with the approximate multiplier fused into the
+QK and AV contractions.
+
+Under a quality tier the attention projections already route through the
+approximate-GEMM engine, but the score (``q @ k^T``) and value
+(``p @ v``) contractions ran exact — approximating them via the engine
+would materialize the (B, H, S, T) score/prob tensors in HBM, exactly
+what flash attention exists to avoid.  This kernel applies the paper's
+multiplier semantics *inside* the online-softmax tile loop:
+
+``mode="lowrank"``
+    scores  = (q_int @ k_int^T + Ue_q @ Ve_k^T) * scale_q * scale_k
+    p @ v   = (p_int @ v_int  + U[p_int] @ Ve_v) * scale_p * scale_v
+    with (U, V) the rank-r SVD factors of the error table — both terms
+    are MXU matmuls; the operand embeddings are gathered once in HBM
+    (like the fused lowrank GEMM), except ``U[p_int]`` which *must* be
+    gathered in-kernel because the probabilities only exist there.
+
+``mode="bitexact"``
+    every scalar product in both contractions goes through the
+    (2^n, 2^n) product LUT, pinned whole in VMEM (f32 — exact for the
+    n <= 8 products it holds); gather-bound, the faithful oracle.
+
+Probability quantization is *static*: p in [0, 1] after the online-max
+subtraction, so ``p_int = round(p * (2^n - 1))`` with sign +1 and scale
+``1/(2^n - 1)`` — no data-dependent calibration inside the kernel.  The
+softmax statistics (m, l) stay exact f32: only the two contractions run
+through the multiplier, mirroring a datapath where the MAC arrays are
+approximate but the max/sum trees are not.
+
+Gradients are straight-through at the attention level: backward reuses
+the exact flash-attention backward kernels on the approximate forward's
+(o, lse) residuals — the same policy the engine applies to
+non-differentiable GEMM modes.
+
+``approx_attention_reference`` mirrors the *blockwise* algorithm op for
+op in pure jnp (same tile sizes, same update order), so interpret-mode
+parity against the kernel is bit-exact and asserted in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import quantization
+from repro.engine import artifacts
+from repro.engine.policy import resolve_interpret
+from repro.kernels.flash_attention import NEG_INF, _block_mask, _bwd, _dot
+
+__all__ = ["approx_flash_attention", "approx_attention_reference", "ATTN_MODES"]
+
+ATTN_MODES = ("bitexact", "lowrank")
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+MAX_ATTN_N = 8  # both modes gather (2^n, ...) error/product tables
+
+
+# ---------------------------------------------------------- shared tile math
+def _online_update(m, l, acc, s_int, allow, av_int, *,
+                   qk_scale, pv_scale, scale, softcap, n):
+    """One (q-block, k-block) step of the approximate online softmax.
+
+    ``s_int`` is the integer-valued approximate score block (pre-scale),
+    ``av_int(p_int)`` the integer-valued approximate ``p @ v`` block.
+    Shared verbatim by the Pallas kernels and the blockwise reference, so
+    interpret-mode parity is structural.
+    """
+    s = s_int * (qk_scale * scale)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(allow, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    p_int = jnp.round(p * ((1 << n) - 1)).astype(jnp.int32)
+    acc_new = acc * corr[:, None] + av_int(p_int) * pv_scale
+    return m_new, l_new, acc_new
+
+
+def _lowrank_tile(qi, ki_t, vi, ueq, vek, vev, ut, *, rank):
+    """(s_int, av_int) for one lowrank tile pair.
+
+    qi (bq, hd), ki_t (bk, hd), vi (bk, hd): signed integer values (f32).
+    ueq (bq, hd*r), vek (bk, hd*r): signed error embeddings of q and k.
+    vev (bk, r*hd): V-side error embedding of v, (r, hd) C-flattened.
+    ut (2^n, r): the U factor, gathered in-kernel by quantized p.
+    """
+    bq = qi.shape[0]
+    bk, hd = vi.shape
+    s_int = _dot(qi, ki_t, trans_b=True) + _dot(ueq, vek, trans_b=True)
+    vev2 = vev.reshape(bk * rank, hd)
+
+    def av_int(p_int):
+        up = jnp.take(ut, p_int.reshape(-1), axis=0).reshape(bq, bk * rank)
+        return _dot(p_int.astype(jnp.float32), vi) + _dot(up, vev2)
+
+    return s_int, av_int
+
+
+def _bitexact_tile(mq, sq, mk, sk, mv, sv, lut, *, n):
+    """(s_int, av_int) for one bitexact tile pair: every scalar product is
+    a product-LUT gather (the (bq, bk, hd) cube the GEMM LUT kernel also
+    walks), signs applied as f32 outer factors."""
+    bq, hd = mq.shape
+    bk = mk.shape[0]
+    base = jnp.int32(1 << n)
+    idx = mq[:, None, :] * base + mk[None, :, :]  # (bq, bk, hd)
+    prod = jnp.take(lut, idx.reshape(-1), axis=0).reshape(bq, bk, hd)
+    s_int = (prod * (sq[:, None, :] * sk[None, :, :])).sum(axis=-1)
+
+    def av_int(p_int):
+        idx2 = p_int[:, :, None] * base + mv[None, :, :]
+        prod2 = jnp.take(lut, idx2.reshape(-1), axis=0).reshape(bq, bk, hd)
+        return (prod2 * sv[None, :, :]).sum(axis=1)
+
+    return s_int, av_int
+
+
+# ------------------------------------------------------------------- kernels
+def _carry_init(o_ref, ml_ref):
+    o_ref[...] = jnp.zeros_like(o_ref)
+    ml_ref[0, 0, 0, :] = jnp.full((ml_ref.shape[-1],), NEG_INF, jnp.float32)
+    ml_ref[0, 1, 0, :] = jnp.zeros((ml_ref.shape[-1],), jnp.float32)
+
+
+def _carry_step(o_ref, ml_ref, qp, kp, sc, s_int, av_int,
+                *, causal, window, softcap, scale, n, nk):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _():
+        _carry_init(o_ref, ml_ref)
+
+    allow = _block_mask(qp, kp, causal, window)
+    m, l, acc = _online_update(
+        ml_ref[0, 0, 0, :], ml_ref[0, 1, 0, :], o_ref[0, :, 0, :],
+        s_int, allow, av_int,
+        qk_scale=sc[0, 0], pv_scale=sc[0, 1], scale=scale,
+        softcap=softcap, n=n,
+    )
+    ml_ref[0, 0, 0, :] = m
+    ml_ref[0, 1, 0, :] = l
+    o_ref[0, :, 0, :] = acc
+
+    @pl.when(ki == nk - 1)
+    def _():
+        l_fin = jnp.maximum(ml_ref[0, 1, 0, :], 1e-30)
+        o_ref[0, :, 0, :] = o_ref[0, :, 0, :] / l_fin[:, None]
+        ml_ref[0, 0, 0, :] = ml_ref[0, 0, 0, :] + jnp.log(l_fin)
+
+
+def _lowrank_kernel(qp_ref, kp_ref, sc_ref, qi_ref, ki_ref, vi_ref,
+                    ueq_ref, vek_ref, vev_ref, ut_ref, o_ref, ml_ref,
+                    *, causal, window, softcap, scale, n, rank, nk):
+    s_int, av_int = _lowrank_tile(
+        qi_ref[0, :, 0, :], ki_ref[0, :, 0, :], vi_ref[0, :, 0, :],
+        ueq_ref[0, :, 0, :], vek_ref[0, :, 0, :], vev_ref[0, :, 0, :],
+        ut_ref[...], rank=rank,
+    )
+    _carry_step(o_ref, ml_ref, qp_ref[0, :], kp_ref[0, :], sc_ref[...],
+                s_int, av_int, causal=causal, window=window,
+                softcap=softcap, scale=scale, n=n, nk=nk)
+
+
+def _bitexact_kernel(qp_ref, kp_ref, sc_ref, mq_ref, sq_ref, mk_ref, sk_ref,
+                     mv_ref, sv_ref, lut_ref, o_ref, ml_ref,
+                     *, causal, window, softcap, scale, n, nk):
+    s_int, av_int = _bitexact_tile(
+        mq_ref[0, :, 0, :], sq_ref[0, :, 0, :],
+        mk_ref[0, :, 0, :], sk_ref[0, :, 0, :],
+        mv_ref[0, :, 0, :], sv_ref[0, :, 0, :],
+        lut_ref[...].reshape(-1), n=n,
+    )
+    _carry_step(o_ref, ml_ref, qp_ref[0, :], kp_ref[0, :], sc_ref[...],
+                s_int, av_int, causal=causal, window=window,
+                softcap=softcap, scale=scale, n=n, nk=nk)
+
+
+# ------------------------------------------------------------ operand prep
+def _quant_signed(x, n):
+    """Per-tensor sign-magnitude quantization; returns (mag u32, sign f32,
+    signed integer values f32, scale)."""
+    qp = quantization.calibrate_absmax(jax.lax.stop_gradient(x), bits=n)
+    mag, sign = quantization.quantize(x, qp)
+    sign = sign.astype(jnp.float32)
+    return mag, sign, mag.astype(jnp.float32) * sign, qp.scale
+
+
+def _prepare(mode, q, k, v, *, n, t, fix_to_1, rank):
+    """Quantize operands and gather the HBM-side error artifacts.
+
+    Returns (operands, scales) where ``scales = [[qk_scale, pv_scale]]``
+    and ``operands`` is the mode-specific tuple fed to the kernel after
+    padding.  p-quantization is static (scale ``1/(2^n - 1)``), so every
+    data-dependent scale is resolved here, outside the kernel.
+    """
+    mq, sq, qi, scale_q = _quant_signed(q, n)
+    mk, sk, ki, scale_k = _quant_signed(k, n)
+    mv, sv, vi, scale_v = _quant_signed(v, n)
+    scales = jnp.stack(
+        [scale_q * scale_k, scale_v / jnp.float32((1 << n) - 1)]
+    ).reshape(1, 2).astype(jnp.float32)
+    if mode == "lowrank":
+        u, vf, _ = artifacts.svd_factors(n, t, rank, fix_to_1)
+        b, s, h, hd = q.shape
+        tt, kv = k.shape[1], k.shape[2]
+        ueq = (u[mq.astype(jnp.int32)] * sq[..., None]).reshape(b, s, h, hd * rank)
+        vek = (vf[mk.astype(jnp.int32)] * sk[..., None]).reshape(b, tt, kv, hd * rank)
+        # V-side embedding of v, (r, hd) C-flattened so the kernel's
+        # (bk*r, hd) reshape walks rows as t*r + j — the layout the
+        # in-kernel U[p_int] @ Ve_v contraction flattens against.
+        vev = jnp.swapaxes(vf[mv.astype(jnp.int32)] * sv[..., None], -1, -2)
+        vev = vev.reshape(b, tt, kv, rank * hd)
+        return (qi, ki, vi, ueq, vek, vev, u.astype(jnp.float32)), scales
+    # bitexact: products < 2^{2n} are exact in f32, so the LUT rides VMEM
+    # as f32 and both gathers stay in the kernel.
+    lut = artifacts.product_lut(n, t, fix_to_1).astype(jnp.float32)
+    i32 = lambda a: a.astype(jnp.int32)
+    return (i32(mq), sq, i32(mk), sk, i32(mv), sv, lut), scales
+
+
+def _pad_seq(x, target, axis):
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, pad)
+
+
+# ------------------------------------------------------------------ forward
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "causal", "window", "softcap", "scale",
+                     "n", "t", "fix_to_1", "rank", "bq", "bk", "interpret"),
+)
+def _approx_fwd(q, k, v, q_pos, k_pos, *, mode, causal, window, softcap,
+                scale, n, t, fix_to_1, rank, bq, bk, interpret):
+    b, s, h, hd = q.shape
+    tt, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bq_, bk_ = min(bq, s), min(bk, tt)
+    sp = pl.cdiv(s, bq_) * bq_
+    tp = pl.cdiv(tt, bk_) * bk_
+    nq, nk = sp // bq_, tp // bk_
+
+    ops, scales = _prepare(mode, q, k, v, n=n, t=t, fix_to_1=fix_to_1, rank=rank)
+    # Explicit padding to tile multiples: padded key slots carry
+    # k_pos = -1 (masked to exactly zero probability, zero AV embedding),
+    # padded query rows are sliced off below — no out-of-bounds blocks.
+    q_side = lambda x: _pad_seq(x, sp, 1)
+    k_side = lambda x: _pad_seq(x, tp, 1)
+    if mode == "lowrank":
+        qi, ki, vi, ueq, vek, vev, ut = ops
+        ops_p = (q_side(qi), k_side(ki), k_side(vi),
+                 q_side(ueq), k_side(vek), k_side(vev), ut)
+        table = ut
+        kernel = functools.partial(
+            _lowrank_kernel, causal=causal, window=window, softcap=softcap,
+            scale=scale, n=n, rank=rank, nk=nk)
+        # (width, side) per operand: q-side blocks walk (qi_, h_), k-side
+        # blocks walk (ki_, h_ // g) — the GQA head mapping.
+        layout = (
+            (hd, "q"), (hd, "k"), (hd, "k"),
+            (hd * rank, "q"), (hd * rank, "k"), (rank * hd, "k"),
+        )
+    else:
+        mq, sq, mk, sk, mv, sv, lut = ops
+        ops_p = (q_side(mq), q_side(sq), k_side(mk), k_side(sk),
+                 k_side(mv), k_side(sv), lut)
+        table = lut
+        kernel = functools.partial(
+            _bitexact_kernel, causal=causal, window=window, softcap=softcap,
+            scale=scale, n=n, nk=nk)
+        layout = (
+            (hd, "q"), (hd, "q"), (hd, "k"),
+            (hd, "k"), (hd, "k"), (hd, "k"),
+        )
+    qp = _pad_seq(q_pos, sp, 1)
+    kp = jnp.pad(k_pos, ((0, 0), (0, tp - tt)), constant_values=-1)
+
+    in_specs = [
+        pl.BlockSpec((1, bq_), lambda b_, h_, qi_, ki_: (b_, qi_)),
+        pl.BlockSpec((1, bk_), lambda b_, h_, qi_, ki_: (b_, ki_)),
+        pl.BlockSpec((1, 2), lambda b_, h_, qi_, ki_: (0, 0)),
+    ]
+    for w_, side in layout:
+        if side == "q":
+            in_specs.append(pl.BlockSpec(
+                (1, bq_, 1, w_), lambda b_, h_, qi_, ki_: (b_, qi_, h_, 0)))
+        else:
+            in_specs.append(pl.BlockSpec(
+                (1, bk_, 1, w_),
+                lambda b_, h_, qi_, ki_: (b_, ki_, h_ // g, 0)))
+    in_specs.append(pl.BlockSpec(table.shape, lambda b_, h_, qi_, ki_:
+                                 (0,) * table.ndim))
+
+    o, ml = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, bq_, 1, hd), lambda b_, h_, qi_, ki_: (b_, qi_, h_, 0)),
+            pl.BlockSpec((1, 2, 1, bq_), lambda b_, h_, qi_, ki_: (b_, 0, h_, qi_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sp, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, 2, h, sp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, scales, *ops_p)
+    return o[:, :s], ml[:, 0, :, :s]
+
+
+# --------------------------------------------------------------- public API
+@functools.partial(jax.custom_vjp, nondiff_argnums=tuple(range(5, 17)))
+def approx_flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    mode: str = "lowrank",
+    n: int = 8,
+    t: int = 4,
+    fix_to_1: bool = True,
+    rank: int = 8,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: float = 1.0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash attention with approximate QK and AV contractions.
+
+    q (B, S, H, hd), k/v (B, T, KV, hd), positions (B, S)/(B, T);
+    returns (B, S, H, hd) f32.  ``mode`` is ``"lowrank"`` or
+    ``"bitexact"`` (n <= 8 — both gather (2^n, ...) tables).  Gradients
+    are straight-through: the exact flash-attention backward runs on the
+    approximate forward's (o, lse) residuals.
+    """
+    o, _ = _approx_fwd(
+        q, k, v, q_pos, k_pos, mode=mode, causal=causal, window=window,
+        softcap=softcap, scale=scale, n=n, t=t, fix_to_1=fix_to_1,
+        rank=rank, bq=bq, bk=bk, interpret=resolve_interpret(interpret),
+    )
+    return o
+
+
+def validate_attn_mode(mode: str, n: int) -> None:
+    if mode not in ATTN_MODES:
+        raise ValueError(
+            f"approx attention supports modes {ATTN_MODES}, got {mode!r}")
+    if n > MAX_ATTN_N:
+        raise ValueError(
+            f"approx attention gathers (2^n, ...) tables in VMEM, which "
+            f"needs n <= {MAX_ATTN_N} (got n={n})")
+
+
+def _vjp_fwd(q, k, v, q_pos, k_pos, mode, n, t, fix_to_1, rank,
+             causal, window, softcap, scale, bq, bk, interpret):
+    o, lse = _approx_fwd(
+        q, k, v, q_pos, k_pos, mode=mode, causal=causal, window=window,
+        softcap=softcap, scale=scale, n=n, t=t, fix_to_1=fix_to_1,
+        rank=rank, bq=bq, bk=bk, interpret=resolve_interpret(interpret),
+    )
+    return o, (q, k, v, q_pos, k_pos, o, lse)
+
+
+def _vjp_bwd(mode, n, t, fix_to_1, rank, causal, window, softcap, scale,
+             bq, bk, interpret, res, do):
+    # Straight-through at the attention level: exact backward kernels on
+    # the approximate forward's residuals (same policy as the engine's
+    # non-differentiable GEMM modes).
+    return _bwd(causal, window, softcap, scale, bq, bk,
+                resolve_interpret(interpret), res, do)
+
+
+approx_flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# ---------------------------------------------------------------- reference
+def approx_attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    mode: str = "lowrank",
+    n: int = 8,
+    t: int = 4,
+    fix_to_1: bool = True,
+    rank: int = 8,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: float = 1.0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """Pure-jnp mirror of the fused kernel's *blockwise* algorithm.
+
+    Identical tile sizes, identical update order, identical ops
+    (``_online_update`` / ``_lowrank_tile`` / ``_bitexact_tile`` are
+    shared with the kernel bodies), so interpret-mode parity is
+    bit-exact — the oracle the parity sweep asserts against.
+    """
+    b, s, h, hd = q.shape
+    tt, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bq_, bk_ = min(bq, s), min(bk, tt)
+    sp = -(-s // bq_) * bq_
+    tp = -(-tt // bk_) * bk_
+
+    ops, scales = _prepare(mode, q, k, v, n=n, t=t, fix_to_1=fix_to_1, rank=rank)
+    qk_scale, pv_scale = scales[0, 0], scales[0, 1]
+    q_side = lambda x: _pad_seq(x, sp, 1)
+    k_side = lambda x: _pad_seq(x, tp, 1)
+    qp = _pad_seq(q_pos, sp, 1)
+    kp = jnp.pad(k_pos, ((0, 0), (0, tp - tt)), constant_values=-1)
+    if mode == "lowrank":
+        qi, ki, vi, ueq, vek, vev, ut = ops
+        qi, ueq = q_side(qi), q_side(ueq)
+        ki, vi, vek, vev = k_side(ki), k_side(vi), k_side(vek), k_side(vev)
+    else:
+        mq, sq, mk, sk, mv, sv, lut = ops
+        lut = lut.reshape(-1)
+        mq, sq = q_side(mq.astype(jnp.int32)), q_side(sq)
+        mk, sk = k_side(mk.astype(jnp.int32)), k_side(sk)
+        mv, sv = k_side(mv.astype(jnp.int32)), k_side(sv)
+
+    out = jnp.zeros((b, sp, h, hd), jnp.float32)
+    for b_ in range(b):
+        for h_ in range(h):
+            kvh = h_ // g
+            for qi_ in range(sp // bq_):
+                qs = slice(qi_ * bq_, (qi_ + 1) * bq_)
+                m = jnp.full((bq_,), NEG_INF, jnp.float32)
+                l = jnp.zeros((bq_,), jnp.float32)
+                acc = jnp.zeros((bq_, hd), jnp.float32)
+                for ki_ in range(tp // bk_):
+                    ks = slice(ki_ * bk_, (ki_ + 1) * bk_)
+                    if mode == "lowrank":
+                        s_int, av_int = _lowrank_tile(
+                            qi[b_, qs, h_], ki[b_, ks, kvh], vi[b_, ks, kvh],
+                            ueq[b_, qs, h_], vek[b_, ks, kvh],
+                            vev[b_, ks, kvh], ut, rank=rank)
+                    else:
+                        s_int, av_int = _bitexact_tile(
+                            mq[b_, qs, h_], sq[b_, qs, h_],
+                            mk[b_, ks, kvh], sk[b_, ks, kvh],
+                            mv[b_, ks, kvh], sv[b_, ks, kvh], lut, n=n)
+                    allow = _block_mask(qp[b_, qs], kp[b_, ks], causal, window)
+                    m, l, acc = _online_update(
+                        m, l, acc, s_int, allow, av_int,
+                        qk_scale=qk_scale, pv_scale=pv_scale, scale=scale,
+                        softcap=softcap, n=n)
+                l_fin = jnp.maximum(l, 1e-30)
+                out = out.at[b_, qs, h_].set(acc / l_fin[:, None])
+    return out[:, :s]

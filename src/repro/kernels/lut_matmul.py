@@ -34,8 +34,14 @@ def _kernel(lut_ref, ma_ref, sa_ref, mb_ref, sb_ref, o_ref, *, n: int):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    ma = ma_ref[...].astype(jnp.int32)  # (BM, BK)
-    mb = mb_ref[...].astype(jnp.int32)  # (BK, BN)
+    # Clamp magnitudes into the table's [0, 2^n) domain before forming the
+    # gather index: an out-of-range quantized magnitude (buggy upstream
+    # calibration, adversarial operands) must saturate to the table edge
+    # instead of gathering from another row's products — or, in native
+    # lowering, from out-of-bounds VMEM.
+    qmax = jnp.int32((1 << n) - 1)
+    ma = jnp.minimum(ma_ref[...].astype(jnp.int32), qmax)  # (BM, BK)
+    mb = jnp.minimum(mb_ref[...].astype(jnp.int32), qmax)  # (BK, BN)
     idx = ma[:, :, None] * (1 << n) + mb[None, :, :]  # (BM, BK, BN)
     prod = jnp.take(lut_ref[...].reshape(-1), idx, axis=0).astype(jnp.float32)
     signs = sa_ref[...][:, :, None] * sb_ref[...][None, :, :]

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.engine.policy import resolve_interpret
-from repro.engine.recurrence import pack_u32, seqmul_recurrence
+from repro.engine.recurrence import pack_u32, seqmul_recurrence, validate_nt
 
 LANES = 128
 DEFAULT_BLOCK_ROWS = 64  # (64, 128) u32 tiles = 32 KiB per operand buffer
@@ -36,6 +36,28 @@ def _kernel(a_ref, b_ref, o_ref, *, n, t, approx, fix_to_1):
     )
     # packed 2n-bit product (valid for 2n <= 31)
     o_ref[...] = pack_u32(lo, s_lsp, s_msp, n=n, t=t)
+
+
+def _split_words(lo, s_lsp, s_msp, *, n, t):
+    """(low, high) uint32 words of the 2n-bit product, overflow-free for
+    any n <= 16: ``low`` holds product bits [0, n), ``high`` bits [n, 2n].
+    The accumulator word s = s_lsp + (s_msp << t) is at most n+2 bits, so
+    ``s >> 1`` never overflows where ``s << (n-1)`` (the single-word
+    packing) would."""
+    s = s_lsp + (s_msp << t)
+    one = jnp.uint32(1)
+    low = lo | ((s & one) << (n - 1))
+    high = s >> one
+    return low, high
+
+
+def _words_kernel(a_ref, b_ref, lo_ref, hi_ref, *, n, t, approx, fix_to_1):
+    lo, s_lsp, s_msp, _ = seqmul_recurrence(
+        a_ref[...], b_ref[...], n=n, t=t, approx=approx, fix_to_1=fix_to_1
+    )
+    low, high = _split_words(lo, s_lsp, s_msp, n=n, t=t)
+    lo_ref[...] = low
+    hi_ref[...] = high
 
 
 @functools.partial(
@@ -79,6 +101,52 @@ def _seqmul_pallas_jit(
     return out.reshape(-1)[:flat].reshape(shape)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "t", "approx", "fix_to_1", "block_rows", "interpret"),
+)
+def _seqmul_words_jit(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    n: int,
+    t: int,
+    approx: bool,
+    fix_to_1: bool,
+    block_rows: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
+    shape = a.shape
+    flat = a.size
+    rows = -(-max(flat, 1) // LANES)
+    rows_pad = -(-rows // block_rows) * block_rows
+    pad = rows_pad * LANES - flat
+
+    def prep(x):
+        x = jnp.asarray(x, jnp.uint32).reshape(-1)
+        return jnp.pad(x, (0, pad)).reshape(rows_pad, LANES)
+
+    a2, b2 = prep(a), prep(b)
+    grid = (rows_pad // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    low, high = pl.pallas_call(
+        functools.partial(_words_kernel, n=n, t=t, approx=approx, fix_to_1=fix_to_1),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_pad, LANES), jnp.uint32),
+            jax.ShapeDtypeStruct((rows_pad, LANES), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(a2, b2)
+
+    def post(x):
+        return x.reshape(-1)[:flat].reshape(shape)
+
+    return post(low), post(high)
+
+
 def seqmul_pallas(
     a: jax.Array,
     b: jax.Array,
@@ -94,8 +162,49 @@ def seqmul_pallas(
 
     Flattens, pads to a (rows, 128) layout, launches a 1-D grid of
     (block_rows, 128) tiles, then restores the original shape.
+
+    Validation is eager (before any tracing): (n, t) must be a valid
+    split and the packed single-word output needs 2n <= 31 — wider
+    configurations (the paper's n=16) use :func:`seqmul_pallas_words`.
     """
+    validate_nt(n, t)
+    if 2 * n > 31:
+        raise ValueError(
+            f"packed kernel supports 2n <= 31 bits (got n={n}, 2n={2 * n}); "
+            f"use seqmul_pallas_words for the two-word (low, high) output"
+        )
     return _seqmul_pallas_jit(
+        a, b, n=n, t=t, approx=approx, fix_to_1=fix_to_1,
+        block_rows=block_rows, interpret=resolve_interpret(interpret),
+    )
+
+
+def seqmul_pallas_words(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    n: int,
+    t: int,
+    approx: bool = True,
+    fix_to_1: bool = True,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Widened elementwise product: returns ``(low, high)`` uint32 words.
+
+    ``low`` holds product bits [0, n), ``high`` bits [n, 2n] — the full
+    2n-bit product is ``low + (high << n)`` (assembled on host in uint64
+    for n > 15).  This is the path that serves the paper's n=16
+    configuration, where the single-word packing (2n <= 31) cannot.
+    """
+    validate_nt(n, t)
+    if n > 16:
+        raise ValueError(
+            f"two-word output holds bits [0, 2n] across two uint32 words "
+            f"with the recurrence in uint32 lanes, which needs n <= 16 "
+            f"(got n={n})"
+        )
+    return _seqmul_words_jit(
         a, b, n=n, t=t, approx=approx, fix_to_1=fix_to_1,
         block_rows=block_rows, interpret=resolve_interpret(interpret),
     )

@@ -249,6 +249,17 @@ def attention(
     scale = hd**-0.5
     softcap = cfg.attn_logit_softcap
 
+    ap_attn = cfg.approx.for_target("attn") if (
+        cfg.approx.enabled and "attn" in cfg.approx.targets
+    ) else None
+    fused_approx = (
+        ap_attn is not None
+        and ap_attn.mode in ("bitexact", "lowrank")
+        and ap_attn.backend != "reference"
+        and cfg.attn_impl == "pallas"
+        and not decode
+    )
+
     if not decode and cfg.attn_impl == "pallas":
         # VMEM-resident flash kernel; k/v stay unrepeated (GQA head
         # mapping happens in the BlockSpec index_map, not in HBM)
@@ -264,10 +275,27 @@ def attention(
                 b_ //= 2
             return b_
 
-        out = flash_attention(
-            q, k, v, q_pos, k_pos, causal_, window, softcap, scale,
-            _block(q.shape[1]), _block(k.shape[1]), use_interpret(),
-        )
+        if fused_approx:
+            # quality-tier attention: the QK/AV contractions themselves
+            # run through the approximate multiplier inside the online-
+            # softmax tile loop (kernels/approx_attention.py) — the
+            # projections above already went through the engine.
+            from repro.kernels.approx_attention import (
+                approx_flash_attention, validate_attn_mode,
+            )
+
+            validate_attn_mode(ap_attn.mode, ap_attn.n)
+            out = approx_flash_attention(
+                q, k, v, q_pos, k_pos, ap_attn.mode, ap_attn.n, ap_attn.t,
+                ap_attn.fix_to_1, ap_attn.rank, causal_, window, softcap,
+                scale, min(_block(q.shape[1]), 128),
+                min(_block(k.shape[1]), 128), use_interpret(),
+            )
+        else:
+            out = flash_attention(
+                q, k, v, q_pos, k_pos, causal_, window, softcap, scale,
+                _block(q.shape[1]), _block(k.shape[1]), use_interpret(),
+            )
     elif decode and cfg.attn_impl == "pallas" and _no_mesh():
         # single-device serving: stream the KV cache through VMEM
         # (multi-device decode keeps the XLA path — the cache is

@@ -1,0 +1,293 @@
+"""Fused-kernel parity sweep (ISSUE 6).
+
+Asserts the tiled Pallas GEMM bodies bit-match their pure-jnp reference
+oracles across mode × tier-resolved t × n ∈ {4, 8} × shape (including
+ragged non-tile-multiple M/K/N), that the straight-through custom_vjp
+routes exact-matmul gradients through the fused bodies, that the n=16
+two-word seqmul path matches the core oracle, that the LUT gather clamp
+survives adversarial out-of-range magnitudes, and that the fused
+approximate attention kernel matches its blockwise reference op for op.
+
+Everything runs in interpret mode on CPU (the engine policy's default
+off-TPU) — this is the `kernel-parity` CI step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import seqmul as core_seqmul
+
+SHAPES = [(16, 32, 16), (17, 33, 19)]  # tile-multiple-ish and ragged
+FUSED_MODES = ["bitexact", "lowrank", "seqmul", "inject"]
+
+
+def _operands(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    return x, w
+
+
+def _matmul(x, w, mode, backend, *, n, t):
+    kw = dict(mode=mode, backend=backend, n=n, t=t)
+    if engine.get_mode(mode).needs_key:
+        kw["key"] = jax.random.PRNGKey(7)
+    return np.asarray(engine.matmul(x, w, **kw))
+
+
+# ------------------------------------------------------------ GEMM parity
+def _assert_parity(mode, ref, pal):
+    if mode == "lowrank":
+        # the SVD correction term is float-valued, so the tiled K-blocked
+        # reduction tree can differ from the reference einsum by ulps;
+        # every other fused mode accumulates integer-valued f32 and is
+        # bit-exact by construction
+        np.testing.assert_allclose(ref, pal, rtol=2e-6, atol=2e-6)
+    else:
+        np.testing.assert_array_equal(ref, pal)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("n_bits", [4, 8])
+@pytest.mark.parametrize("mode", FUSED_MODES)
+def test_fused_gemm_bitmatches_reference(mode, n_bits, shape):
+    x, w = _operands(*shape)
+    t = engine.config.default_t(n_bits)
+    ref = _matmul(x, w, mode, "reference", n=n_bits, t=t)
+    pal = _matmul(x, w, mode, "pallas", n=n_bits, t=t)
+    _assert_parity(mode, ref, pal)
+
+
+@pytest.mark.parametrize("tier", ["high", "balanced", "draft"])
+def test_fused_gemm_parity_at_tier_resolutions(tier):
+    """Every tier's mlp-class (mode, n, t) selection runs fused and
+    bit-matches its reference oracle."""
+    qc = engine.resolve_tier(tier)
+    sel = next(q for q in qc.per_target if q.target == "mlp")
+    if engine.get_mode(sel.mode).pallas is None:
+        pytest.skip(f"tier {tier} mode {sel.mode} has no pallas body")
+    x, w = _operands(17, 33, 19, seed=3)
+    ref = _matmul(x, w, sel.mode, "reference", n=sel.n, t=sel.t)
+    pal = _matmul(x, w, sel.mode, "pallas", n=sel.n, t=sel.t)
+    _assert_parity(sel.mode, ref, pal)
+
+
+def test_seqmul_gemm_oracle_matches_lut_semantics():
+    """The fused-recurrence GEMM and the LUT GEMM implement the same
+    multiplier: at n <= 8 their integer accumulations are identical."""
+    rng = np.random.default_rng(5)
+    ma = jnp.asarray(rng.integers(0, 256, (9, 13)), jnp.uint32)
+    mb = jnp.asarray(rng.integers(0, 256, (13, 7)), jnp.uint32)
+    sa = jnp.asarray(rng.choice([-1, 1], (9, 13)), jnp.int8)
+    sb = jnp.asarray(rng.choice([-1, 1], (13, 7)), jnp.int8)
+    via_lut = engine.bitexact_gemm_int(ma, sa, mb, sb, n=8, t=4)
+    via_rec = engine.seqmul_gemm_int(ma, sa, mb, sb, n=8, t=4)
+    np.testing.assert_array_equal(np.asarray(via_lut), np.asarray(via_rec))
+
+
+@pytest.mark.parametrize("mode", ["seqmul", "inject"])
+def test_straight_through_grads_route_through_fused_bodies(mode):
+    """Non-differentiable fused modes get exact-matmul gradients, bit-equal
+    between backends (the custom_vjp backward never touches the kernel)."""
+    x, w = _operands(8, 16, 8, seed=1)
+
+    def loss(backend):
+        def f(x, w):
+            kw = dict(mode=mode, backend=backend, n=8, t=4)
+            if engine.get_mode(mode).needs_key:
+                kw["key"] = jax.random.PRNGKey(7)
+            return engine.matmul(x, w, **kw).sum()
+        return jax.grad(f, argnums=(0, 1))(x, w)
+
+    gx_ref, gw_ref = loss("reference")
+    gx_pal, gw_pal = loss("pallas")
+    np.testing.assert_array_equal(np.asarray(gx_ref), np.asarray(gx_pal))
+    np.testing.assert_array_equal(np.asarray(gw_ref), np.asarray(gw_pal))
+    # straight-through == exact matmul backward
+    np.testing.assert_allclose(
+        np.asarray(gx_pal), np.asarray(jnp.ones((8, 8)) @ w.T), rtol=1e-6)
+
+
+# -------------------------------------------------- n=16 two-word packing
+@pytest.mark.parametrize("approx", [True, False])
+@pytest.mark.parametrize("n_t", [(16, 8), (16, 12), (12, 6)])
+def test_seqmul_words_matches_core_oracle(n_t, approx):
+    n, t = n_t
+    from repro.kernels.seqmul_kernel import seqmul_pallas_words
+
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(0, 1 << n, (257,)), jnp.uint32)
+    b = jnp.asarray(rng.integers(0, 1 << n, (257,)), jnp.uint32)
+    lo, hi = seqmul_pallas_words(a, b, n=n, t=t, approx=approx)
+    got = np.asarray(lo, np.uint64) + (np.asarray(hi, np.uint64) << np.uint64(n))
+    words = core_seqmul.seq_mul_words(a, b, n=n, t=t, approx=approx)
+    want = core_seqmul.assemble_product_u64(words, n=n, t=t)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dispatch_validates_eagerly():
+    x, w = _operands(4, 8, 4)
+    with pytest.raises(ValueError, match="bitexact.*n <= 8"):
+        engine.matmul(x, w, mode="bitexact", n=9, t=4)
+    with pytest.raises(ValueError, match="seqmul.*n <= 12"):
+        engine.matmul(x, w, mode="seqmul", n=13, t=4)
+    with pytest.raises(ValueError, match="mode 'seqmul'"):
+        engine.matmul(x, w, mode="seqmul", n=8, t=9)  # t > n invalid
+    a = jnp.zeros((4,), jnp.uint32)
+    with pytest.raises(ValueError, match="seqmul_pallas_words"):
+        engine.multiply(a, a, n=16, t=8)
+
+
+# --------------------------------------------------------- LUT gather clamp
+def test_lut_gather_clamps_adversarial_magnitudes():
+    """Out-of-range quantized magnitudes (upstream bug / adversarial
+    operands) must saturate to the table edge, not gather another row's
+    products or out-of-bounds VMEM."""
+    from repro.kernels.lut_matmul import lut_matmul_pallas
+
+    n = 4
+    lut = engine.artifacts.product_lut_flat(n, 2)
+    rng = np.random.default_rng(8)
+    # magnitudes way past 2^n - 1, including values whose idx would land
+    # in other rows of the flattened table
+    ma = jnp.asarray(rng.integers(0, 1 << 8, (9, 11)), jnp.uint32)
+    mb = jnp.asarray(rng.integers(0, 1 << 8, (11, 5)), jnp.uint32)
+    sa = jnp.asarray(rng.choice([-1.0, 1.0], (9, 11)), jnp.float32)
+    sb = jnp.asarray(rng.choice([-1.0, 1.0], (11, 5)), jnp.float32)
+    out = np.asarray(lut_matmul_pallas(lut, ma, sa, mb, sb, n=n, bm=8, bn=8, bk=8))
+    qmax = (1 << n) - 1
+    want = np.asarray(engine.bitexact_gemm_int(
+        jnp.minimum(ma, qmax), sa.astype(jnp.int8),
+        jnp.minimum(mb, qmax), sb.astype(jnp.int8), n=n, t=2))
+    np.testing.assert_array_equal(out, want)
+    assert np.isfinite(out).all()
+
+
+# ------------------------------------------------------- fused attention
+ATTN_SHAPES = [
+    # (B, S, T, H, KV, HD) — tile-multiple and ragged
+    (1, 16, 16, 2, 2, 16),
+    (2, 24, 24, 4, 2, 16),  # ragged vs bq=bk=16, GQA g=2
+]
+
+
+def _attn_inputs(b, s, t, h, kv, hd, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, kv, hd)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kp = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    return q, k, v, qp, kp
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("mode", ["bitexact", "lowrank"])
+def test_approx_attention_bitmatches_blockwise_reference(mode, shape):
+    from repro.kernels.approx_attention import (
+        approx_attention_reference, approx_flash_attention)
+
+    q, k, v, qp, kp = _attn_inputs(*shape)
+    hd = q.shape[-1]
+    kern = approx_flash_attention(
+        q, k, v, qp, kp, mode, 8, 4, True, 4, True, None, None,
+        hd**-0.5, 16, 16, True)
+    # the reference mirrors the kernel op for op; jitting it makes XLA
+    # fuse both identically, so the comparison is bit-exact
+    ref = jax.jit(functools.partial(
+        approx_attention_reference, mode=mode, n=8, t=4, rank=4,
+        causal=True, scale=hd**-0.5, bq=16, bk=16))(q, k, v, qp, kp)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(ref))
+
+
+def test_approx_attention_window_and_softcap():
+    from repro.kernels.approx_attention import (
+        approx_attention_reference, approx_flash_attention)
+
+    q, k, v, qp, kp = _attn_inputs(1, 16, 16, 2, 1, 16, seed=4)
+    kern = approx_flash_attention(
+        q, k, v, qp, kp, "lowrank", 8, 4, True, 4, True, 8, 20.0,
+        0.25, 8, 8, True)
+    ref = jax.jit(functools.partial(
+        approx_attention_reference, mode="lowrank", n=8, t=4, rank=4,
+        causal=True, window=8, softcap=20.0, scale=0.25, bq=8, bk=8))(
+        q, k, v, qp, kp)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(ref))
+
+
+def test_approx_attention_error_grows_with_t():
+    """Paper semantics inside the attention kernel: deferring a heavier
+    carry (larger t) must not shrink the output error."""
+    from repro.kernels.approx_attention import approx_flash_attention
+    from repro.kernels.flash_attention import flash_attention
+
+    q, k, v, qp, kp = _attn_inputs(1, 16, 16, 2, 2, 16, seed=6)
+    exact = np.asarray(flash_attention(
+        q, k, v, qp, kp, True, None, None, 0.25, 16, 16, True))
+
+    def err(t):
+        o = np.asarray(approx_flash_attention(
+            q, k, v, qp, kp, "bitexact", 8, t, True, 4, True, None, None,
+            0.25, 16, 16, True))
+        return np.linalg.norm(o - exact)
+
+    assert err(2) <= err(7) * 1.001
+
+
+def test_approx_attention_straight_through_grads():
+    from repro.kernels.approx_attention import approx_flash_attention
+    from repro.kernels.flash_attention import flash_attention
+
+    q, k, v, qp, kp = _attn_inputs(1, 16, 16, 2, 2, 16, seed=9)
+
+    def loss(q, k, v):
+        return approx_flash_attention(
+            q, k, v, qp, kp, "lowrank", 8, 2, True, 8, True, None, None,
+            0.25, 16, 16, True).sum()
+
+    def exact_loss(q, k, v):
+        return flash_attention(
+            q, k, v, qp, kp, True, None, None, 0.25, 16, 16, True).sum()
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    exact_grads = jax.grad(exact_loss, argnums=(0, 1, 2))(q, k, v)
+    for g, eg in zip(grads, exact_grads):
+        g, eg = np.asarray(g), np.asarray(eg)
+        assert np.isfinite(g).all()
+        cos = (g.ravel() @ eg.ravel()) / (
+            np.linalg.norm(g) * np.linalg.norm(eg) + 1e-30)
+        assert cos > 0.95, cos
+
+
+def test_attention_layer_routes_fused_approx():
+    """models.attention picks the fused approximate kernel when the attn
+    target is approximated under attn_impl='pallas'."""
+    import dataclasses
+
+    from repro.configs.base import ApproxConfig, ModelConfig
+    from repro.models import attention as attn_mod
+    from repro.models.layers import Ctx
+
+    cfg = ModelConfig(
+        name="tiny", family="test", d_model=32, num_heads=4, num_kv_heads=2,
+        head_dim=8, d_ff=64, vocab_size=128, num_layers=1,
+        attn_impl="pallas",
+        approx=ApproxConfig(enabled=True, mode="lowrank",
+                            targets=("attn",), n=8, t=4, rank=4))
+    params = attn_mod.init_attn(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (2, 16))
+    out, _ = attn_mod.attention(params, x, pos, Ctx(cfg=cfg))
+    assert out.shape == (2, 16, 32)
+    assert bool(jnp.isfinite(out).all())
+    # and the approximation actually changed the output vs exact
+    cfg2 = dataclasses.replace(cfg, approx=ApproxConfig(enabled=False))
+    out2, _ = attn_mod.attention(params, x, pos, Ctx(cfg=cfg2))
+    assert not np.allclose(np.asarray(out), np.asarray(out2))
