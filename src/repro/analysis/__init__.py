@@ -1,0 +1,70 @@
+"""Static analysis of the accuracy-configurable kernels (the jaxpr auditor).
+
+The paper's segmented-carry design gives every intermediate a *known
+algebraic bit-width* (t-bit LSP words, deferred carries of weight 2^t,
+2n-bit products).  This package turns those algebraic facts into
+*checked* facts: every registered engine mode's kernel body is traced to
+a jaxpr (abstract eval only — nothing executes) and audited by three
+passes:
+
+``overflow``  interval abstract interpretation over the integer
+              dataflow (`repro.analysis.interp`), proving no
+              intermediate wraps its carrier dtype and no per-product
+              integer-valued f32 leaves the exactly-representable range
+              — the ``2n <= 31`` packed bound and the ``n <= 12``
+              seqmul bound fall out as *derived* facts.
+``gather``    bounds checking of every LUT / embedding gather index
+              against its table extent, end to end from the quantizer's
+              clamp — the PR 6 VMEM-gather clamp becomes provably
+              redundant instead of load-bearing.
+``vmem``      per-(mode, n, t, tiles) VMEM budget estimation from the
+              `pallas_call` BlockSpecs plus a peak-liveness walk of the
+              kernel jaxpr (`repro.analysis.vmem`) — the machine-
+              readable source of the docs/kernels.md sizing table.
+
+`repro.analysis.audit` orchestrates the passes over the registered
+mode × quality-tier matrix; ``launch/analyze.py`` is the CLI and the
+gating CI entry point; ``engine.config.resolve_t`` consults
+:func:`certified` so the controller cannot resolve an (n, t) the
+kernels cannot legally execute.
+"""
+
+from repro.analysis.audit import (
+    AuditResult,
+    audit_kernel,
+    audit_matrix,
+    certified,
+    matrix_entries,
+    report,
+    require_certified,
+)
+from repro.analysis.domain import F32_EXACT_INT, Interval
+from repro.analysis.interp import AuditPolicy, Finding, interpret
+from repro.analysis.spec import TraceSpec, ValueRange
+from repro.analysis.vmem import (
+    VMEM_BUDGET_BYTES,
+    TileBudgetError,
+    tile_footprint,
+    validate_tiles,
+)
+
+__all__ = [
+    "AuditPolicy",
+    "AuditResult",
+    "F32_EXACT_INT",
+    "Finding",
+    "Interval",
+    "TileBudgetError",
+    "TraceSpec",
+    "VMEM_BUDGET_BYTES",
+    "ValueRange",
+    "audit_kernel",
+    "audit_matrix",
+    "certified",
+    "interpret",
+    "matrix_entries",
+    "report",
+    "require_certified",
+    "tile_footprint",
+    "validate_tiles",
+]

@@ -1,0 +1,249 @@
+"""Audit orchestration: the mode × tier matrix, verdicts, and the report.
+
+``audit_matrix`` runs the three passes (overflow/exactness intervals,
+gather bounds, VMEM budget) over every registered Pallas-backed engine
+mode at every tier-resolved split, plus the boundary configurations
+where the derived bounds bind (seqmul n=12, packed-word n=15/16) and
+the kernel-level adversarial contracts.  ``certified`` is the cached
+per-(mode, n, t) verdict ``engine.config.resolve_t`` consults;
+``require_certified`` is the dispatch-time gate behind
+``REPRO_STATIC_AUDIT=1``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+from repro.analysis import contracts, vmem
+from repro.analysis import interp as interp_mod
+from repro.analysis.domain import Interval
+from repro.analysis.interp import AuditPolicy, Finding, Interpreter
+from repro.analysis.spec import TraceSpec
+
+__all__ = [
+    "AuditResult",
+    "CertificationError",
+    "audit_kernel",
+    "audit_matrix",
+    "certified",
+    "certified_elementwise",
+    "matrix_entries",
+    "report",
+    "require_certified",
+]
+
+
+class CertificationError(ValueError):
+    """A kernel was about to run that the static audit did not certify."""
+
+
+@dataclasses.dataclass
+class AuditResult:
+    """Outcome of the three passes over one traced configuration."""
+
+    name: str
+    family: str  # gemm | attention | elementwise | kernel
+    mode: str
+    n: int
+    t: int
+    certified: bool
+    findings: list[Finding]
+    facts: dict[str, Any]
+    vmem: list[dict]
+    error: Optional[str] = None  # trace-time rejection (eager guard)
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "family": self.family,
+            "mode": self.mode,
+            "n": self.n,
+            "t": self.t,
+            "certified": self.certified,
+            "findings": [
+                {"kind": f.kind, "message": f.message, "where": f.where,
+                 "gating": f.gating}
+                for f in self.findings
+            ],
+            "facts": dict(self.facts),
+            "vmem": list(self.vmem),
+            "error": self.error,
+        }
+
+
+def audit_kernel(spec: TraceSpec, *, family: str = "kernel", mode: str = "",
+                 n: int = 0, t: int = 0) -> AuditResult:
+    """Trace ``spec`` once and run all three passes over the jaxpr.
+
+    A trace-time exception (an eager dispatch guard firing) is itself a
+    static rejection: the configuration cannot launch, so the result is
+    uncertified with the guard's message as the finding.
+    """
+    try:
+        closed = spec.trace()
+    except Exception as e:  # noqa: BLE001 - guard messages vary by kernel
+        return AuditResult(
+            name=spec.name, family=family, mode=mode, n=n, t=t,
+            certified=False,
+            findings=[Finding("trace-rejected", str(e))],
+            facts={}, vmem=[], error=str(e),
+        )
+    policy = AuditPolicy(exact_products=spec.exact_products)
+    it = Interpreter(policy)
+    it.stack.append(spec.name)
+    args = [Interval(r.lo, r.hi, int_valued=r.int_valued)
+            for r in spec.input_ranges()]
+    outs = it.run_closed(closed, args)
+    findings = list(it.findings)
+    findings.extend(interp_mod.check_output_contract(spec, outs))
+    vm = vmem.estimate_pallas_calls(closed)
+    for entry in vm:
+        if not entry["within_budget"]:
+            findings.append(Finding(
+                "vmem-budget",
+                f"pallas_call {entry['name']!r} needs "
+                f"{entry['total_bytes'] / 2**20:.2f} MiB VMEM "
+                f"({entry['pipeline_bytes'] / 2**20:.2f} blocks + "
+                f"{entry['live_bytes'] / 2**20:.2f} live), over the "
+                f"{entry['budget_bytes'] / 2**20:.0f} MiB budget",
+                spec.name,
+            ))
+    ok = (not any(f.gating for f in findings)
+          and all(e["within_budget"] for e in vm))
+    return AuditResult(
+        name=spec.name, family=family, mode=mode, n=n, t=t,
+        certified=ok, findings=findings, facts=dict(it.facts), vmem=vm,
+    )
+
+
+# ------------------------------------------------------------- the matrix
+
+
+def _tier_splits(n: int) -> list[int]:
+    from repro.engine import config as engine_config
+
+    ts = set()
+    for name in engine_config.list_tiers():
+        tier = engine_config.get_tier(name)
+        for _target, budget in tier.budgets:
+            ts.add(engine_config.resolve_t(n, budget).t)
+    return sorted(ts)
+
+
+def matrix_entries() -> list[tuple[str, str, int, int]]:
+    """(family, mode, n, t) tuples covering the registered surface:
+    every Pallas-backed GEMM mode at every tier-resolved split, the
+    fused attention modes at every attn-budgeted tier split, the
+    elementwise packed/two-word paths, the bound-frontier boundary
+    configurations, and the kernel-level adversarial contracts."""
+    from repro.engine import config as engine_config
+    from repro.engine import modes as engine_modes
+
+    n = engine_config.DEFAULT_N
+    entries: list[tuple[str, str, int, int]] = []
+    for mode in engine_modes.list_modes():
+        if engine_modes.get_mode(mode).pallas is None:
+            continue
+        for t in _tier_splits(n):
+            entries.append(("gemm", mode, n, t))
+    # derived-bound frontier: widest seqmul the f32 assembly admits, and
+    # the small-n tile branch
+    entries.append(("gemm", "seqmul", 12, 6))
+    entries.append(("gemm", "seqmul", 4, 2))
+    for tname in engine_config.list_tiers():
+        tier = engine_config.get_tier(tname)
+        battn = dict(tier.budgets).get("attn")
+        if battn is None:
+            continue
+        t_attn = engine_config.resolve_t(n, battn).t
+        for amode in ("bitexact", "lowrank"):
+            entries.append(("attention", amode, n, t_attn))
+    t_def = engine_config.default_t(n)
+    entries.append(("elementwise", "packed_single", n, t_def))
+    entries.append(("elementwise", "packed_single", 15, 7))
+    entries.append(("elementwise", "packed_words", 16, 8))
+    entries.append(("kernel", "lut_gemm", n, t_def))
+    entries.append(("kernel", "seqmul_gemm", 12, 6))
+    seen: set[tuple] = set()
+    out = []
+    for e in entries:
+        if e not in seen:
+            seen.add(e)
+            out.append(e)
+    return out
+
+
+def _build_spec(family: str, mode: str, n: int, t: int) -> TraceSpec | None:
+    if family == "gemm":
+        return contracts.gemm_trace(mode, n, t)
+    if family == "attention":
+        return contracts.attention_trace(mode, n, t)
+    if family == "elementwise":
+        return contracts.kernel_trace(mode, n, t)
+    if family == "kernel":
+        return contracts.kernel_trace(mode, n, t)
+    raise ValueError(f"unknown audit family {family!r}")
+
+
+def audit_matrix() -> list[AuditResult]:
+    """Run the three passes over every matrix entry."""
+    results = []
+    for family, mode, n, t in matrix_entries():
+        spec = _build_spec(family, mode, n, t)
+        if spec is None:
+            continue
+        results.append(audit_kernel(spec, family=family, mode=mode, n=n, t=t))
+    return results
+
+
+def report() -> dict:
+    """Machine-readable audit report (the CLI's ``--report`` payload)."""
+    results = audit_matrix()
+    return {
+        "vmem_budget_bytes": vmem.VMEM_BUDGET_BYTES,
+        "all_certified": all(r.certified for r in results),
+        "entries": [r.to_dict() for r in results],
+    }
+
+
+# ------------------------------------------------------ cached verdicts
+
+
+@functools.lru_cache(maxsize=4096)
+def certified(mode: str, n: int, t: int) -> bool:
+    """Static verdict for ``mode``'s GEMM at (n, t): True iff the traced
+    kernel passes all three passes (trivially True for modes without a
+    Pallas body — there is no kernel to certify).  This is what
+    ``engine.config.resolve_t(..., mode=...)`` consults."""
+    from repro.engine import modes as engine_modes
+
+    spec = engine_modes.get_mode(mode)
+    if spec.pallas is None:
+        return True
+    trace = contracts.gemm_trace(mode, n, t)
+    if trace is None:
+        return True
+    return audit_kernel(trace, family="gemm", mode=mode, n=n, t=t).certified
+
+
+@functools.lru_cache(maxsize=1024)
+def certified_elementwise(n: int, t: int) -> bool:
+    """Static verdict for the elementwise packed single-u32 kernel."""
+    trace = contracts.kernel_trace("packed_single", n, t)
+    return audit_kernel(trace, family="elementwise", mode="packed_single",
+                        n=n, t=t).certified
+
+
+def require_certified(mode: str, n: int, t: int, *,
+                      elementwise: bool = False) -> None:
+    """Dispatch-time gate (``REPRO_STATIC_AUDIT=1``): refuse to launch a
+    kernel the analyzer has not certified."""
+    ok = certified_elementwise(n, t) if elementwise else certified(mode, n, t)
+    if not ok:
+        raise CertificationError(
+            f"static audit has not certified mode {mode!r} at (n={n}, t={t}) "
+            f"and REPRO_STATIC_AUDIT=1 forbids launching unproven kernels; "
+            f"run `python -m repro.launch.analyze` for the findings"
+        )

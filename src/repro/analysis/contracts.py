@@ -1,0 +1,133 @@
+"""Trace contracts for the registered engine surface.
+
+Builds the :class:`~repro.analysis.spec.TraceSpec` set the audit matrix
+runs over.  Engine-level GEMM traces go through the *real* dispatch
+surface — ``ModeSpec.pallas`` with ``prepare``-built artifacts closed
+over as constants — so the quantizer's clip is part of the traced
+dataflow and magnitude bounds like ``[0, 2^n - 1]`` are *derived* from
+the code, not asserted.  (This is what makes the LUT kernel's
+gather-clamp provably redundant: the bound holds before the kernel is
+entered.)
+
+Kernel-level traces (the ``audit_trace*`` builders colocated in each
+``repro.kernels`` module) deliberately bypass the public eager guards
+so the dispatch bounds — seqmul ``n <= 12``, packed ``2n <= 31`` — can
+be *rediscovered* by the interpreter instead of assumed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.spec import TraceSpec, ValueRange, sds
+from repro.engine import config as engine_config
+from repro.engine import modes as engine_modes
+
+__all__ = ["gemm_trace", "attention_trace", "kernel_trace"]
+
+
+def gemm_trace(mode: str, n: int, t: int) -> TraceSpec | None:
+    """Engine-level trace of ``mode``'s Pallas GEMM body at (n, t).
+
+    Returns ``None`` for modes without a fused kernel (their reference
+    body runs on every backend — nothing to certify).  Inputs are
+    unconstrained f32 operands shaped to put at least two steps on the
+    K grid axis, so the revisited accumulator tile is exercised.
+    """
+    spec = engine_modes.get_mode(mode)
+    if spec.pallas is None:
+        return None
+    tiles = engine_config.kernel_tiles(mode, n, t)
+    p = engine_modes.GemmParams(
+        n=n, t=t, fix_to_1=True, rank=8,
+        tiles=(tiles.bm, tiles.bn, tiles.bk),
+    )
+    key = jax.random.PRNGKey(0)
+    m_dim, k_dim, n_dim = tiles.bm, 2 * tiles.bk, tiles.bn
+
+    def fn(x, w):
+        extra = spec.prepare(x, w, p, key) if spec.prepare is not None else ()
+        return spec.pallas(x, w, p, *extra)
+
+    return TraceSpec(
+        name=f"gemm:{mode}[n={n},t={t}]",
+        fn=fn,
+        args=[sds((m_dim, k_dim), jnp.float32), sds((k_dim, n_dim), jnp.float32)],
+        ranges=[None, None],
+        exact_products=spec.exact_products,
+    )
+
+
+def attention_trace(mode: str, n: int, t: int, *, seq: int = 256,
+                    heads: int = 4, head_dim: int = 64,
+                    rank: int = 8) -> TraceSpec:
+    """Engine-level trace of the fused flash-attention forward at (n, t).
+
+    At least two K-axis grid steps, causal masking on, GQA grouping 2:
+    the online-softmax carry refs and the in-kernel ``U[p_int]`` /
+    product-LUT gathers are all on the traced path.  Tiles are the
+    mode's deployed defaults (``attn_tiles``) so the certificate covers
+    exactly what dispatch launches.
+    """
+    from repro.kernels.approx_attention import _approx_fwd, attn_tiles
+
+    bq, bk = attn_tiles(mode)
+    seq = max(seq, 2 * bk, bq)
+    kv = max(heads // 2, 1)
+
+    def fn(q, k, v, q_pos, k_pos):
+        return _approx_fwd(
+            q, k, v, q_pos, k_pos, mode=mode, causal=True, window=None,
+            softcap=None, scale=1.0, n=n, t=t, fix_to_1=True, rank=rank,
+            bq=bq, bk=bk, interpret=True,
+        )
+
+    return TraceSpec(
+        name=f"attention:{mode}[n={n},t={t}]",
+        fn=fn,
+        args=[
+            sds((1, seq, heads, head_dim), jnp.float32),
+            sds((1, seq, kv, head_dim), jnp.float32),
+            sds((1, seq, kv, head_dim), jnp.float32),
+            sds((1, seq), jnp.int32),
+            sds((1, seq), jnp.int32),
+        ],
+        ranges=[
+            None, None, None,
+            ValueRange(0.0, float(seq - 1), int_valued=True),
+            ValueRange(-1.0, float(seq - 1), int_valued=True),
+        ],
+        exact_products=engine_modes.get_mode(mode).exact_products,
+    )
+
+
+def kernel_trace(kind: str, n: int, t: int) -> TraceSpec:
+    """Kernel-level trace under the kernel's *documented* input contract
+    (quantized magnitudes in ``[0, 2^n - 1]``), bypassing eager guards —
+    the bound-derivation surface.  ``kind`` is one of ``seqmul_gemm``,
+    ``lut_gemm``, ``packed_single``, ``packed_words``, ``packed_gemm``,
+    ``lowrank_gemm``."""
+    from repro.kernels import (
+        lowrank_matmul,
+        lut_matmul,
+        packed_matmul,
+        seqmul_kernel,
+        seqmul_matmul,
+    )
+
+    builders = {
+        "seqmul_gemm": seqmul_matmul.audit_trace,
+        "lut_gemm": lut_matmul.audit_trace,
+        "packed_single": seqmul_kernel.audit_trace_packed,
+        "packed_words": seqmul_kernel.audit_trace_words,
+        "packed_gemm": packed_matmul.audit_trace,
+        "lowrank_gemm": lowrank_matmul.audit_trace,
+    }
+    try:
+        builder = builders[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel trace kind {kind!r}; known: {sorted(builders)}"
+        ) from None
+    return builder(n=n, t=t)

@@ -1,0 +1,260 @@
+"""The interval abstract domain the auditor interprets jaxprs over.
+
+Every traced value is summarized by an :class:`Interval`: elementwise
+bounds ``[lo, hi]`` plus two qualitative bits that carry the paper's
+arithmetic contract through the dataflow —
+
+``int_valued``
+    every element is a mathematical integer.  Quantized magnitudes,
+    split-word states and assembled products are int-valued even when
+    their carrier dtype is f32; this is what lets the exactness pass
+    distinguish "f32 used as a wide integer" from ordinary float math.
+
+``reduced``
+    the value has passed through a K-style reduction (``reduce_sum``,
+    ``dot_general``, ``cumsum`` over a non-trivial axis).  Per-product
+    assembly must stay under ``2^24`` for the bit-exact parity
+    contract; *accumulator* envelopes scale with K and are reported as
+    a derived fact (``k_exact``) rather than gated, matching the
+    repo's parity model (docs/kernels.md).
+
+``dominates``
+    set of traced variables this value is a running elementwise upper
+    bound of (seeded by ``reduce_max`` / ``max``).  The refinement
+    ``exp(x - m) ∈ [0, 1]`` when ``m`` dominates ``x`` is what proves
+    the online-softmax probabilities — and hence the ``U[p_int]``
+    attention gather — in bounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, FrozenSet
+
+import jax.numpy as jnp
+
+# Largest integer magnitude exactly representable in f32 (2^24; every
+# integer in [-2^24, 2^24] round-trips).  Products of n-bit magnitudes
+# are < 2^{2n}, so per-product exactness holds iff 2n <= 24 — the
+# seqmul ``n <= 12`` dispatch bound, rediscovered by the interpreter.
+F32_EXACT_INT = float(1 << 24)
+
+_INF = math.inf
+
+
+def _carrier_bounds(dtype: Any) -> tuple[float, float]:
+    try:
+        dt = jnp.dtype(dtype)
+    except TypeError:  # opaque dtypes (PRNG key<fry>) have no bounds
+        return (-_INF, _INF)
+    if dt == jnp.dtype(jnp.bool_):
+        return (0.0, 1.0)
+    if jnp.issubdtype(dt, jnp.integer):
+        info = jnp.iinfo(dt)
+        return (float(info.min), float(info.max))
+    return (-_INF, _INF)
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    lo: float
+    hi: float
+    int_valued: bool = False
+    reduced: bool = False
+    dominates: FrozenSet[Any] = frozenset()
+
+    def __post_init__(self) -> None:
+        if self.lo > self.hi:  # pragma: no cover - domain invariant
+            raise ValueError(f"empty interval [{self.lo}, {self.hi}]")
+
+    # -- constructors ------------------------------------------------
+    @staticmethod
+    def point(v: float, int_valued: bool | None = None) -> "Interval":
+        if int_valued is None:
+            int_valued = float(v).is_integer()
+        return Interval(float(v), float(v), int_valued=int_valued)
+
+    @staticmethod
+    def of_dtype(dtype: Any) -> "Interval":
+        lo, hi = _carrier_bounds(dtype)
+        try:
+            int_valued = bool(jnp.issubdtype(jnp.dtype(dtype), jnp.integer)
+                              or jnp.dtype(dtype) == jnp.dtype(jnp.bool_))
+        except TypeError:
+            int_valued = False
+        return Interval(lo, hi, int_valued=int_valued)
+
+    @staticmethod
+    def bool01() -> "Interval":
+        return Interval(0.0, 1.0, int_valued=True)
+
+    # -- predicates --------------------------------------------------
+    @property
+    def is_point(self) -> bool:
+        return self.lo == self.hi and math.isfinite(self.lo)
+
+    def fits(self, dtype: Any) -> bool:
+        lo, hi = _carrier_bounds(dtype)
+        return self.lo >= lo and self.hi <= hi
+
+    def magnitude(self) -> float:
+        return max(abs(self.lo), abs(self.hi))
+
+    # -- lattice -----------------------------------------------------
+    def join(self, other: "Interval") -> "Interval":
+        return Interval(
+            min(self.lo, other.lo),
+            max(self.hi, other.hi),
+            int_valued=self.int_valued and other.int_valued,
+            reduced=self.reduced or other.reduced,
+            dominates=self.dominates & other.dominates,
+        )
+
+    # -- transfer helpers (plain data, no findings) ------------------
+    def with_(self, **kw: Any) -> "Interval":
+        return dataclasses.replace(self, **kw)
+
+
+def join_all(ivals: list[Interval]) -> Interval:
+    out = ivals[0]
+    for iv in ivals[1:]:
+        out = out.join(iv)
+    return out
+
+
+def _mul_bound(a: float, b: float) -> float:
+    # inf * 0 in interval arithmetic is 0 (limits of products of bounds)
+    if (a == 0.0 and math.isinf(b)) or (b == 0.0 and math.isinf(a)):
+        return 0.0
+    return a * b
+
+
+def mul(a: Interval, b: Interval) -> Interval:
+    cands = [
+        _mul_bound(a.lo, b.lo),
+        _mul_bound(a.lo, b.hi),
+        _mul_bound(a.hi, b.lo),
+        _mul_bound(a.hi, b.hi),
+    ]
+    return Interval(
+        min(cands), max(cands),
+        int_valued=a.int_valued and b.int_valued,
+        reduced=a.reduced or b.reduced,
+    )
+
+
+def add(a: Interval, b: Interval) -> Interval:
+    return Interval(
+        a.lo + b.lo, a.hi + b.hi,
+        int_valued=a.int_valued and b.int_valued,
+        reduced=a.reduced or b.reduced,
+    )
+
+
+def sub(a: Interval, b: Interval) -> Interval:
+    return Interval(
+        a.lo - b.hi, a.hi - b.lo,
+        int_valued=a.int_valued and b.int_valued,
+        reduced=a.reduced or b.reduced,
+    )
+
+
+def div(a: Interval, b: Interval) -> Interval:
+    if b.lo <= 0.0 <= b.hi:
+        return Interval(-_INF, _INF, reduced=a.reduced or b.reduced)
+    cands = [a.lo / b.lo, a.lo / b.hi, a.hi / b.lo, a.hi / b.hi]
+    return Interval(min(cands), max(cands), int_valued=False,
+                    reduced=a.reduced or b.reduced)
+
+
+def min_(a: Interval, b: Interval) -> Interval:
+    return Interval(min(a.lo, b.lo), min(a.hi, b.hi),
+                    int_valued=a.int_valued and b.int_valued,
+                    reduced=a.reduced or b.reduced)
+
+
+def max_(a: Interval, b: Interval, dominated: FrozenSet[Any] = frozenset()) -> Interval:
+    return Interval(max(a.lo, b.lo), max(a.hi, b.hi),
+                    int_valued=a.int_valued and b.int_valued,
+                    reduced=a.reduced or b.reduced,
+                    dominates=a.dominates | b.dominates | dominated)
+
+
+def shift_left(a: Interval, s: Interval) -> Interval:
+    """Unclamped mathematical ``a * 2^s`` — overflow checked by caller."""
+    if not (a.int_valued and s.int_valued) or s.lo < 0:
+        return Interval(-_INF, _INF, int_valued=a.int_valued and s.int_valued)
+    cands = [a.lo * 2.0 ** s.lo, a.lo * 2.0 ** s.hi,
+             a.hi * 2.0 ** s.lo, a.hi * 2.0 ** s.hi]
+    return Interval(min(cands), max(cands), int_valued=True,
+                    reduced=a.reduced or s.reduced)
+
+
+def shift_right(a: Interval, s: Interval) -> Interval:
+    """Logical/arithmetic right shift: ``floor(a / 2^s)`` elementwise."""
+    if s.lo < 0:
+        return Interval(-_INF, _INF)
+    cands = [math.floor(a.lo / 2.0 ** s.lo) if math.isfinite(a.lo) else a.lo,
+             math.floor(a.lo / 2.0 ** s.hi) if math.isfinite(a.lo) else a.lo,
+             math.floor(a.hi / 2.0 ** s.lo) if math.isfinite(a.hi) else a.hi,
+             math.floor(a.hi / 2.0 ** s.hi) if math.isfinite(a.hi) else a.hi]
+    return Interval(min(cands), max(cands), int_valued=True,
+                    reduced=a.reduced or s.reduced)
+
+
+def bit_and(a: Interval, b: Interval) -> Interval:
+    """Sound envelope for ``a & b``: a non-negative mask bounds the result
+    regardless of the other operand's sign (two's complement)."""
+    if a.lo >= 0 and b.lo >= 0:
+        return Interval(0.0, min(a.hi, b.hi), int_valued=True,
+                        reduced=a.reduced or b.reduced)
+    if a.lo >= 0:
+        return Interval(0.0, a.hi, int_valued=True, reduced=a.reduced or b.reduced)
+    if b.lo >= 0:
+        return Interval(0.0, b.hi, int_valued=True, reduced=a.reduced or b.reduced)
+    return Interval(-_INF, _INF, int_valued=a.int_valued and b.int_valued)
+
+
+def _next_pow2_minus1(v: float) -> float:
+    if not math.isfinite(v):
+        return v
+    if v <= 0:
+        return 0.0
+    return float((1 << int(v).bit_length()) - 1)
+
+
+def bit_or(a: Interval, b: Interval, *, is_xor: bool = False) -> Interval:
+    """Sound envelope for ``a | b`` / ``a ^ b`` on non-negative operands:
+    the result never exceeds the sum (``a|b <= a+b``) and never needs
+    more bits than the wider operand (``a|b < 2^bits(max(a, b))``).
+    This tightness matters: the seqmul augend ``(s_lsp >> 1) |
+    ((s_msp & 1) << (t-1))`` composes disjoint bit fields, and a
+    doubling envelope would push the assembled n=12 product past 2^24
+    when the true bound is exactly ``2^24 - 1``.  ``a ^ b`` shares the
+    upper envelope but can cancel to 0, so its lower bound stays 0."""
+    if a.lo >= 0 and b.lo >= 0:
+        if math.isfinite(a.hi) and math.isfinite(b.hi):
+            hi = min(a.hi + b.hi, _next_pow2_minus1(max(a.hi, b.hi)))
+        else:
+            hi = _INF
+        lo = 0.0 if is_xor else max(a.lo, b.lo)
+        return Interval(lo, hi,
+                        int_valued=True, reduced=a.reduced or b.reduced)
+    return Interval(-_INF, _INF, int_valued=a.int_valued and b.int_valued)
+
+
+def monotone_unary(a: Interval, f: Any, int_valued: bool = False) -> Interval:
+    def _apply(v: float) -> float:
+        if not math.isfinite(v):
+            return v if v > 0 else (f(-1e308) if v < 0 else v)
+        try:
+            return f(v)
+        except OverflowError:
+            return _INF
+
+    lo, hi = _apply(a.lo), _apply(a.hi)
+    if math.isnan(lo) or math.isnan(hi):
+        return Interval(-_INF, _INF, reduced=a.reduced)
+    return Interval(min(lo, hi), max(lo, hi), int_valued=int_valued,
+                    reduced=a.reduced)

@@ -5,7 +5,7 @@ error-metric benchmarks and the approximate-training example."""
 
 import dataclasses
 
-from repro.configs.base import ApproxConfig, ModelConfig
+from repro.configs.base import ApproxConfig
 from repro.configs.qwen3_0_6b import CONFIG as _QWEN3
 
 CONFIG = dataclasses.replace(

@@ -23,7 +23,6 @@ single copy shared with the Pallas kernel (`kernels.seqmul_kernel`).
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -15,7 +15,7 @@ whose loss visibly decreases within a few hundred steps (examples/).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -183,6 +183,7 @@ def resolve_t(
     order: int = 1,
     pa=None,
     pb=None,
+    mode: Optional[str] = None,
 ) -> TPoint:
     """The controller: cheapest split meeting ``budget``.
 
@@ -194,6 +195,14 @@ def resolve_t(
     budget binds at or below the delay-optimal split the result is the
     unique cheapest valid ``t = t_max``.  Raises :class:`QualityError`
     when even ``t = 1`` exceeds the budget.
+
+    With ``mode`` set, candidates are additionally filtered through the
+    static kernel audit (:func:`repro.analysis.audit.certified`): the
+    controller can only return a (n, t) whose traced kernel the
+    analyzer has proven overflow/gather/VMEM-safe, so an uncertified
+    configuration is unreachable through tier resolution by
+    construction.  Raises :class:`QualityError` naming certification
+    when the audit filter empties the budget-valid set.
     """
     if pa is None and pb is None:
         points = sweep_t(n, order=order)
@@ -206,6 +215,18 @@ def resolve_t(
             f"{budget} (tightest candidate: t=1 with er<={points[0].er_bound:.3f}, "
             f"nmed<={points[0].nmed_est:.2e}, mae={points[0].mae})"
         )
+    if mode is not None:
+        from repro.analysis import audit  # lazy: analysis imports us
+
+        certified = [p for p in valid if audit.certified(mode, n, p.t)]
+        if not certified:
+            raise QualityError(
+                f"every budget-valid splitting point for mode {mode!r} at "
+                f"n={n} (t in {[p.t for p in valid]}) failed static kernel "
+                f"certification; run `python -m repro.launch.analyze` for "
+                f"the findings"
+            )
+        valid = certified
     return min(valid, key=lambda p: (p.delay, p.t))
 
 
@@ -231,19 +252,23 @@ class KernelTiles:
     bk: int
 
 
-# VMEM sizing (docs/kernels.md has the full table):
-#  * seqmul keeps ~6 live uint32 (BM, BK, BN) cubes -> cube edge 32
-#    (~768 KiB) fits every n; n <= 4 halves the LUT-free live set so a
-#    48-edge cube (~2.5 MiB) still fits and quarters the grid overhead.
+# VMEM sizing (machine-checked: every selection below must pass
+# repro.analysis.vmem.validate_tiles — positive, power-of-two, and the
+# closed-form footprint under budget; `launch/analyze.py --report`
+# emits the traced numbers that docs/kernels.md is generated from):
+#  * seqmul keeps ~8 live uint32 (BM, BK, BN) cubes -> cube edge 32
+#    (~1 MiB live) fits every n; n <= 4 halves the LUT-free live set so
+#    a 64-edge cube (~8 MiB live) still fits and shrinks the grid 8x.
 #  * lut pins the (2^n, 2^n) table (256 KiB at n=8) + the (BM, BK, BN)
 #    gather cube -> 64 tiles (~6 MiB live worst case).
 #  * lowrank/packed are pure MXU dot kernels -> 128 tiles.
-_SEQMUL_TILES_SMALL_N = KernelTiles(bm=48, bn=48, bk=48)
+_SEQMUL_TILES_SMALL_N = KernelTiles(bm=64, bn=64, bk=64)
 _SEQMUL_TILES = KernelTiles(bm=32, bn=32, bk=32)
 _LUT_TILES = KernelTiles(bm=64, bn=64, bk=64)
 _MXU_TILES = KernelTiles(bm=128, bn=128, bk=128)
 
 
+@functools.lru_cache(maxsize=1024)
 def kernel_tiles(mode: str, n: int, t: int) -> KernelTiles:
     """Fused-kernel tile selection for a (mode, n, t) GEMM call.
 
@@ -251,12 +276,23 @@ def kernel_tiles(mode: str, n: int, t: int) -> KernelTiles:
     split words live regardless of where the cut sits), so tiles depend
     on the mode's live-set shape and the bit-width; ``t`` itself enters
     the kernel *body* (the in-tile recurrence / the LUT contents).
+
+    Every selection is validated eagerly against the static VMEM model
+    (:func:`repro.analysis.vmem.validate_tiles`): a non-positive or
+    non-power-of-two extent, or a footprint over the 16 MiB budget,
+    raises :class:`~repro.analysis.vmem.TileBudgetError` naming the
+    (mode, n, t) — at resolution time, not inside Pallas lowering.
     """
     if mode == "seqmul":
-        return _SEQMUL_TILES_SMALL_N if n <= 4 else _SEQMUL_TILES
-    if mode == "bitexact":
-        return _LUT_TILES
-    return _MXU_TILES
+        tiles = _SEQMUL_TILES_SMALL_N if n <= 4 else _SEQMUL_TILES
+    elif mode == "bitexact":
+        tiles = _LUT_TILES
+    else:
+        tiles = _MXU_TILES
+    from repro.analysis.vmem import validate_tiles  # lazy: analysis imports us
+
+    validate_tiles(mode, n, t, (tiles.bm, tiles.bn, tiles.bk))
+    return tiles
 
 
 @functools.lru_cache(maxsize=64)
@@ -386,13 +422,17 @@ def resolve_tier(
     n: int = DEFAULT_N,
     order: int = 1,
 ) -> QualityConfig:
-    """Resolve a tier's budgets into concrete per-target (n, t) selections."""
+    """Resolve a tier's budgets into concrete per-target (n, t) selections.
+
+    Each selection passes through :func:`resolve_t` with the tier's mode,
+    so every (n, t) a tier hands out is statically certified.
+    """
     spec = get_tier(tier)
     per_target = tuple(
         LayerQuality(
             target=target,
             n=n,
-            t=resolve_t(n, budget, order=order).t,
+            t=resolve_t(n, budget, order=order, mode=spec.mode).t,
             mode=spec.mode,
             backend=spec.backend,
         )

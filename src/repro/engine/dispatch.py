@@ -79,6 +79,25 @@ def _validate_mode_nt(mode: str, n: int, t: int) -> None:
         )
 
 
+def _audit_gate(mode: str, n: int, t: int, *, elementwise: bool = False) -> None:
+    """Optional dispatch-time certification gate.
+
+    With ``REPRO_STATIC_AUDIT=1`` in the environment, a Pallas launch is
+    refused unless the static analyzer (`repro.analysis`) has certified
+    the kernel at this exact (mode, n, t) — overflow, gather-bounds and
+    VMEM passes all clean.  Off by default: verdicts are audited in CI
+    over the full matrix, so the per-call gate is a belt-and-braces
+    check for deployments that want it.
+    """
+    import os
+
+    if os.environ.get("REPRO_STATIC_AUDIT") != "1":
+        return
+    from repro.analysis import audit as _audit
+
+    _audit.require_certified(mode, n, t, elementwise=elementwise)
+
+
 def resolve_backend(backend: str, spec: _modes.ModeSpec | None = None) -> str:
     """Map ``auto`` onto a concrete backend; reject unknown names and an
     explicit ``pallas`` request for a mode with no Pallas body (only
@@ -167,6 +186,8 @@ def matmul(
     from repro.engine import config as _config
 
     tiles = _config.kernel_tiles(mode, n, t)
+    if resolved == "pallas":
+        _audit_gate(mode, n, t)
     p = _modes.GemmParams(
         n=n, t=t, fix_to_1=fix_to_1, rank=rank,
         tiles=(tiles.bm, tiles.bn, tiles.bk),
@@ -205,6 +226,7 @@ def multiply(
         )
     resolved = resolve_backend(backend)
     if resolved == "pallas":
+        _audit_gate(mode_name, n, t, elementwise=True)
         from repro.kernels.seqmul_kernel import seqmul_pallas
 
         return seqmul_pallas(a, b, n=n, t=t, approx=approx, fix_to_1=fix_to_1)

@@ -82,6 +82,15 @@ class ModeSpec:
     in a straight-through ``custom_vjp`` whose backward is the exact
     matmul gradient, so the mode is trainable without call sites
     re-implementing gradient hygiene.
+
+    ``exact_products`` declares the mode's *static* parity contract:
+    integer-valued f32 products must stay under the exactly-
+    representable 2^24 before any reduction.  The jaxpr auditor
+    (`repro.analysis`) enforces it as a gated pass for modes that set
+    it; float-valued modes (lowrank's SVD correction, fakequant) and
+    modes whose integer bounds the interval domain cannot see (inject's
+    bit-packed lanes — parity asserted dynamically in tests) leave it
+    False.
     """
 
     name: str
@@ -90,6 +99,7 @@ class ModeSpec:
     prepare: Optional[Callable] = None  # (x, w, p, key) -> tuple of f32 arrays
     needs_key: bool = False
     differentiable: bool = True
+    exact_products: bool = False
     description: str = ""
 
 
@@ -335,6 +345,7 @@ register_mode(ModeSpec(
     reference=_bitexact_ref,
     pallas=_bitexact_pallas,
     differentiable=False,
+    exact_products=True,
     description="faithful paper semantics via the (2^n, 2^n) product LUT",
 ))
 register_mode(ModeSpec(
@@ -349,6 +360,7 @@ register_mode(ModeSpec(
     reference=_seqmul_ref,
     pallas=_seqmul_pallas,
     differentiable=False,
+    exact_products=True,
     description="paper recurrence fused into the GEMM tile loop (no LUT, n <= 12)",
 ))
 register_mode(ModeSpec(

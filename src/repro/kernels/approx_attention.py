@@ -52,12 +52,25 @@ from repro.engine import artifacts
 from repro.engine.policy import resolve_interpret
 from repro.kernels.flash_attention import NEG_INF, _block_mask, _bwd, _dot
 
-__all__ = ["approx_flash_attention", "approx_attention_reference", "ATTN_MODES"]
+__all__ = ["approx_flash_attention", "approx_attention_reference", "ATTN_MODES",
+           "attn_tiles"]
 
 ATTN_MODES = ("bitexact", "lowrank")
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
+# bitexact walks (bq, bk, hd) LUT-gather cubes (index + product + take's
+# clip-mode copies); bk=64 keeps the traced peak liveness inside the
+# 16 MiB VMEM budget at bq=128 — derived by repro.analysis, which
+# certifies the (bq, bk) pairs attn_tiles returns.
+BITEXACT_BK = 64
 MAX_ATTN_N = 8  # both modes gather (2^n, ...) error/product tables
+
+
+def attn_tiles(mode: str) -> tuple[int, int]:
+    """VMEM-certified default (bq, bk) for ``mode``'s fused attention."""
+    if mode == "bitexact":
+        return DEFAULT_BQ, BITEXACT_BK
+    return DEFAULT_BQ, DEFAULT_BK
 
 
 # ---------------------------------------------------------- shared tile math
@@ -332,18 +345,23 @@ def approx_flash_attention(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     scale: float = 1.0,
-    bq: int = DEFAULT_BQ,
-    bk: int = DEFAULT_BK,
+    bq: Optional[int] = None,
+    bk: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Flash attention with approximate QK and AV contractions.
 
     q (B, S, H, hd), k/v (B, T, KV, hd), positions (B, S)/(B, T);
     returns (B, S, H, hd) f32.  ``mode`` is ``"lowrank"`` or
-    ``"bitexact"`` (n <= 8 — both gather (2^n, ...) tables).  Gradients
-    are straight-through: the exact flash-attention backward runs on the
-    approximate forward's (o, lse) residuals.
+    ``"bitexact"`` (n <= 8 — both gather (2^n, ...) tables).
+    ``bq``/``bk`` default to the mode's VMEM-certified tiles
+    (:func:`attn_tiles`).  Gradients are straight-through: the exact
+    flash-attention backward runs on the approximate forward's (o, lse)
+    residuals.
     """
+    bq_d, bk_d = attn_tiles(mode)
+    bq = bq_d if bq is None else bq
+    bk = bk_d if bk is None else bk
     o, _ = _approx_fwd(
         q, k, v, q_pos, k_pos, mode=mode, causal=causal, window=window,
         softcap=softcap, scale=scale, n=n, t=t, fix_to_1=fix_to_1,
@@ -401,8 +419,8 @@ def approx_attention_reference(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     scale: float = 1.0,
-    bq: int = DEFAULT_BQ,
-    bk: int = DEFAULT_BK,
+    bq: Optional[int] = None,
+    bk: Optional[int] = None,
 ) -> jax.Array:
     """Pure-jnp mirror of the fused kernel's *blockwise* algorithm.
 
@@ -414,6 +432,9 @@ def approx_attention_reference(
     b, s, h, hd = q.shape
     tt, kv = k.shape[1], k.shape[2]
     g = h // kv
+    bq_d, bk_d = attn_tiles(mode)
+    bq = bq_d if bq is None else bq
+    bk = bk_d if bk is None else bk
     bq_, bk_ = min(bq, s), min(bk, tt)
     sp = -(-s // bq_) * bq_
     tp = -(-tt // bk_) * bk_

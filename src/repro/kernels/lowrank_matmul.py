@@ -108,3 +108,26 @@ def lowrank_matmul_pallas(
         a, b, ue, ve, rank=rank, bm=bm, bn=bn, bk=bk,
         interpret=resolve_interpret(interpret),
     )
+
+
+def audit_trace(*, n: int = 8, t: int = 0, rank: int = 8, bm: int = DEFAULT_BM,
+                bn: int = DEFAULT_BN, bk: int = DEFAULT_BK):
+    """Static-audit contract for the lowrank GEMM (no execution).
+
+    Float-valued by design (the SVD correction), so only carrier
+    overflow and VMEM are provable — ``exact_products=False``.
+    """
+    del n, t
+    from repro.analysis.spec import TraceSpec, sds
+
+    fn = functools.partial(_lowrank_matmul_jit, rank=rank, bm=bm, bn=bn,
+                           bk=bk, interpret=True)
+    m_dim, k_dim, n_dim = bm, 2 * bk, bn
+    return TraceSpec(
+        name=f"kernel:lowrank_matmul[r={rank}]",
+        fn=fn,
+        args=[sds((m_dim, k_dim), jnp.float32), sds((k_dim, n_dim), jnp.float32),
+              sds((m_dim, k_dim, rank), jnp.float32),
+              sds((k_dim, n_dim, rank), jnp.float32)],
+        exact_products=False,
+    )

@@ -120,3 +120,35 @@ def lut_matmul_pallas(
         lut, mag_a, sign_a, mag_b, sign_b,
         n=n, bm=bm, bn=bn, bk=bk, interpret=resolve_interpret(interpret),
     )
+
+
+def audit_trace(*, n: int, t: int = 0, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                bk: int = DEFAULT_BK, mag_slack_bits: int = 2):
+    """Static-audit contract for the LUT GEMM (no execution).
+
+    The magnitude contract is deliberately *adversarial*: inputs range
+    over ``[0, 2^{n + mag_slack_bits} - 1]`` — a miscalibrated upstream
+    quantizer — so what ``repro.analysis`` proves is that the in-kernel
+    edge clamp keeps every gather inside the (2^n, 2^n) table even for
+    out-of-contract magnitudes.  (``t`` only shapes the table contents,
+    not the dataflow; accepted for interface uniformity.)
+    """
+    del t
+    from repro.analysis.spec import TraceSpec, ValueRange, sds
+
+    fn = functools.partial(_lut_matmul_jit, n=n, bm=bm, bn=bn, bk=bk,
+                           interpret=True)
+    mag = ValueRange(0.0, float((1 << (n + mag_slack_bits)) - 1), int_valued=True)
+    sgn = ValueRange.sign()
+    # table values are approximate products, bounded by the exact max
+    lut_vals = ValueRange(0.0, float(((1 << n) - 1) ** 2), int_valued=True)
+    m_dim, k_dim, n_dim = bm, 2 * bk, bn
+    return TraceSpec(
+        name=f"kernel:lut_matmul[n={n}]",
+        fn=fn,
+        args=[sds(((1 << n) * (1 << n),), jnp.int32),
+              sds((m_dim, k_dim), jnp.uint32), sds((m_dim, k_dim), jnp.float32),
+              sds((k_dim, n_dim), jnp.uint32), sds((k_dim, n_dim), jnp.float32)],
+        ranges=[lut_vals, mag, sgn, mag, sgn],
+        exact_products=True,
+    )

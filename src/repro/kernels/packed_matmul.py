@@ -129,3 +129,27 @@ def packed_matmul_pallas(
     return _packed_matmul_jit(
         pa, pb, bm=bm, bn=bn, bk=bk, interpret=resolve_interpret(interpret)
     )
+
+
+def audit_trace(*, n: int = 15, t: int = 0, bm: int = DEFAULT_BM,
+                bn: int = DEFAULT_BN, bk: int = DEFAULT_BK):
+    """Static-audit contract for the packed GEMM (no execution).
+
+    Operands are arbitrary uint32 words (any int16 lane pattern): the
+    audit proves the sign-extending lane extraction and the two-plane
+    contraction never overflow their carriers.  Lane *value* bounds are
+    erased by the bit-packing, so f32-exactness of the products is a
+    runtime parity property (tests), not a static one — the trace runs
+    with ``exact_products=False``.
+    """
+    del n, t
+    from repro.analysis.spec import TraceSpec, sds
+
+    fn = functools.partial(_packed_matmul_jit, bm=bm, bn=bn, bk=bk,
+                           interpret=True)
+    return TraceSpec(
+        name="kernel:packed_matmul",
+        fn=fn,
+        args=[sds((bm, 2 * bk), jnp.uint32), sds((2 * bk, bn), jnp.uint32)],
+        exact_products=False,
+    )

@@ -208,3 +208,65 @@ def seqmul_pallas_words(
         a, b, n=n, t=t, approx=approx, fix_to_1=fix_to_1,
         block_rows=block_rows, interpret=resolve_interpret(interpret),
     )
+
+
+def audit_trace_packed(*, n: int, t: int, block_rows: int = 8):
+    """Static-audit contract for the packed single-u32 elementwise kernel.
+
+    Builds a ``pallas_call`` around ``_kernel`` directly, *bypassing*
+    the eager ``2n <= 31`` guard, so ``repro.analysis`` can rediscover
+    the packing bound.  The packed word itself never wraps uint32 (its
+    envelope tops out at ``2^{2n} - 1``); what binds is the *output
+    contract*: consumers (``core.luts`` tables, LUT kernels) treat the
+    packed product as a non-negative int32 payload, so the claim is
+    ``packed <= 2^31 - 1`` — first violated at ``n = 16``, which the
+    auditor reports as a gating "contract" finding.
+    """
+    from repro.analysis.spec import TraceSpec, ValueRange, sds
+
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+
+    def fn(a, b):
+        return pl.pallas_call(
+            functools.partial(_kernel, n=n, t=t, approx=True, fix_to_1=True),
+            grid=(1,),
+            in_specs=[spec, spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((block_rows, LANES), jnp.uint32),
+            interpret=True,
+        )(a, b)
+
+    q = ValueRange.quantized(n)
+    shape = (block_rows, LANES)
+    return TraceSpec(
+        name=f"kernel:seqmul_packed[n={n},t={t}]",
+        fn=fn,
+        args=[sds(shape, jnp.uint32), sds(shape, jnp.uint32)],
+        ranges=[q, q],
+        exact_products=True,
+        out_ranges=[ValueRange(0.0, float(2**31 - 1), int_valued=True)],
+        out_contract_reason=(
+            "packed single-word product is consumed as a non-negative "
+            "int32 LUT payload, requiring 2n <= 31"
+        ),
+    )
+
+
+def audit_trace_words(*, n: int, t: int, block_rows: int = 8):
+    """Static-audit contract for the two-word elementwise kernel: the
+    (low, high) split must stay overflow-free for every n <= 16."""
+    from repro.analysis.spec import TraceSpec, ValueRange, sds
+
+    fn = functools.partial(
+        _seqmul_words_jit, n=n, t=t, approx=True, fix_to_1=True,
+        block_rows=block_rows, interpret=True,
+    )
+    q = ValueRange.quantized(n)
+    shape = (block_rows * LANES,)
+    return TraceSpec(
+        name=f"kernel:seqmul_words[n={n},t={t}]",
+        fn=fn,
+        args=[sds(shape, jnp.uint32), sds(shape, jnp.uint32)],
+        ranges=[q, q],
+        exact_products=True,
+    )

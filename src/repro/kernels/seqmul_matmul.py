@@ -162,3 +162,31 @@ def seqmul_matmul_pallas(
         n=n, t=t, approx=approx, fix_to_1=fix_to_1,
         bm=bm, bn=bn, bk=bk, interpret=resolve_interpret(interpret),
     )
+
+
+def audit_trace(*, n: int, t: int, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                bk: int = DEFAULT_BK):
+    """Static-audit contract for the fused seqmul GEMM (no execution).
+
+    Traces ``_seqmul_matmul_jit`` directly — *bypassing* the public
+    ``n <= 12`` guard — under the documented input contract (magnitudes
+    in ``[0, 2^n - 1]``, signs in {-1, 0, 1}), so the f32-exactness
+    bound is rediscovered by ``repro.analysis`` as a derived fact
+    rather than assumed from this module's docstring.
+    """
+    from repro.analysis.spec import TraceSpec, ValueRange, sds
+
+    fn = functools.partial(
+        _seqmul_matmul_jit, n=n, t=t, approx=True, fix_to_1=True,
+        bm=bm, bn=bn, bk=bk, interpret=True,
+    )
+    q, s = ValueRange.quantized(n), ValueRange.sign()
+    m_dim, k_dim, n_dim = bm, 2 * bk, bn
+    return TraceSpec(
+        name=f"kernel:seqmul_matmul[n={n},t={t}]",
+        fn=fn,
+        args=[sds((m_dim, k_dim), jnp.uint32), sds((m_dim, k_dim), jnp.float32),
+              sds((k_dim, n_dim), jnp.uint32), sds((k_dim, n_dim), jnp.float32)],
+        ranges=[q, s, q, s],
+        exact_products=True,
+    )

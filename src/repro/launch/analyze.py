@@ -1,0 +1,121 @@
+"""Static kernel audit CLI: certify the full mode × tier matrix.
+
+Runs the three analysis passes (`repro.analysis`) — interval/overflow
+abstract interpretation, gather bounds, VMEM budget — over every entry
+of ``analysis.audit.matrix_entries()`` and prints one verdict row per
+traced configuration.  Nothing is executed: every verdict comes from
+abstract evaluation of the kernel jaxpr.
+
+Exit status is non-zero if *any* entry is uncertified, which makes this
+the gating ``static-analysis`` CI job.
+
+Usage:
+  python -m repro.launch.analyze                  # table + exit status
+  python -m repro.launch.analyze --report out.json
+  python -m repro.launch.analyze --markdown       # docs/kernels.md table
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fmt_mib(nbytes: int) -> str:
+    return f"{nbytes / 2**20:.2f}"
+
+
+def _peak_vmem(result) -> int:
+    return max((e["total_bytes"] for e in result.vmem), default=0)
+
+
+def _print_table(results) -> None:
+    rows = [("kernel", "family", "n", "t", "VMEM MiB", "verdict")]
+    for r in results:
+        verdict = "certified" if r.certified else "UNPROVEN"
+        rows.append((r.name, r.family, str(r.n), str(r.t),
+                     _fmt_mib(_peak_vmem(r)) if r.vmem else "-", verdict))
+    widths = [max(len(row[i]) for row in rows) for i in range(len(rows[0]))]
+    for i, row in enumerate(rows):
+        print("  ".join(cell.ljust(w) for cell, w in zip(row, widths)))
+        if i == 0:
+            print("  ".join("-" * w for w in widths))
+
+
+def _print_findings(results) -> None:
+    for r in results:
+        if r.certified:
+            continue
+        print(f"\n{r.name}: NOT certified")
+        for f in r.findings:
+            flag = "gating" if f.gating else "note"
+            print(f"  [{flag}] {f.kind}: {f.message}")
+
+
+def _markdown_table(report: dict) -> str:
+    """The machine-generated VMEM table spliced into docs/kernels.md."""
+    budget = report["vmem_budget_bytes"]
+    lines = [
+        "<!-- BEGIN GENERATED VMEM TABLE"
+        " (python -m repro.launch.analyze --markdown) -->",
+        "| Traced kernel | family | n | t | peak VMEM (MiB) | "
+        f"budget {budget // 2**20} MiB | verdict |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for e in report["entries"]:
+        peak = max((v["total_bytes"] for v in e["vmem"]), default=0)
+        within = all(v["within_budget"] for v in e["vmem"])
+        lines.append(
+            f"| `{e['name']}` | {e['family']} | {e['n']} | {e['t']} | "
+            f"{_fmt_mib(peak) if e['vmem'] else '—'} | "
+            f"{'within' if within else '**over**'} | "
+            f"{'certified' if e['certified'] else '**unproven**'} |"
+        )
+    lines.append(
+        "<!-- END GENERATED VMEM TABLE — do not edit by hand; regenerate "
+        "with `python -m repro.launch.analyze --markdown` -->"
+    )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.launch.analyze",
+        description="statically certify every (mode, n, t) kernel configuration",
+    )
+    parser.add_argument("--report", metavar="PATH",
+                        help="write the machine-readable JSON report here")
+    parser.add_argument("--markdown", action="store_true",
+                        help="print the docs/kernels.md VMEM table and exit")
+    args = parser.parse_args(argv)
+
+    from repro.analysis import audit
+
+    if args.markdown:
+        rep = audit.report()
+        print(_markdown_table(rep))
+        return 0 if rep["all_certified"] else 1
+
+    results = audit.audit_matrix()
+    _print_table(results)
+    bad = [r for r in results if not r.certified]
+    _print_findings(results)
+    print(f"\n{len(results)} configurations audited, "
+          f"{len(results) - len(bad)} certified, {len(bad)} unproven")
+    if args.report:
+        from repro.analysis.vmem import VMEM_BUDGET_BYTES
+
+        rep = {
+            "vmem_budget_bytes": VMEM_BUDGET_BYTES,
+            "all_certified": not bad,
+            "entries": [r.to_dict() for r in results],
+        }
+        with open(args.report, "w") as fh:
+            json.dump(rep, fh, indent=2)
+        print(f"report written to {args.report}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

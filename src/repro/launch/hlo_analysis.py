@@ -26,7 +26,6 @@ All numbers are per-device (the module is the per-partition program).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 from typing import Optional

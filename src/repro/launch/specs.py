@@ -17,7 +17,6 @@ dimension doesn't divide the mesh axis):
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

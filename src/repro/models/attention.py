@@ -281,15 +281,16 @@ def attention(
             # softmax tile loop (kernels/approx_attention.py) — the
             # projections above already went through the engine.
             from repro.kernels.approx_attention import (
-                approx_flash_attention, validate_attn_mode,
+                approx_flash_attention, attn_tiles, validate_attn_mode,
             )
 
             validate_attn_mode(ap_attn.mode, ap_attn.n)
+            bq_d, bk_d = attn_tiles(ap_attn.mode)
             out = approx_flash_attention(
                 q, k, v, q_pos, k_pos, ap_attn.mode, ap_attn.n, ap_attn.t,
                 ap_attn.fix_to_1, ap_attn.rank, causal_, window, softcap,
-                scale, min(_block(q.shape[1]), 128),
-                min(_block(k.shape[1]), 128), use_interpret(),
+                scale, min(_block(q.shape[1]), bq_d),
+                min(_block(k.shape[1]), bk_d), use_interpret(),
             )
         else:
             out = flash_attention(

@@ -17,14 +17,13 @@ computed in vocab-chunked form, see train/steps.py).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import DP, FSDP, TP, constrain
+from repro.distributed.sharding import DP, TP, constrain
 from repro.models import attention, layers, moe, rglru, ssd
 from repro.models.layers import Ctx
 

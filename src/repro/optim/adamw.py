@@ -11,8 +11,7 @@ moments are never live outside one step.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ exactly what the dry-run lowers for the ``prefill_*`` / ``decode_*`` /
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -1,0 +1,230 @@
+"""Static kernel auditor: interval domain soundness, derived-bound
+rediscovery (seqmul n <= 12, packed 2n <= 31), gather-bounds proofs,
+VMEM budget validation, seeded-mutation detection, and the
+resolve_t / dispatch certification gates."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import audit, contracts, interp
+from repro.analysis.domain import Interval, add, bit_or, mul, shift_left
+from repro.analysis.spec import TraceSpec, ValueRange, sds
+from repro.analysis.vmem import (
+    VMEM_BUDGET_BYTES,
+    TileBudgetError,
+    tile_footprint,
+    validate_tiles,
+)
+from repro.engine import config as engine_config
+
+
+def _iv(lo, hi, int_valued=True):
+    return Interval(float(lo), float(hi), int_valued=int_valued)
+
+
+def _audit(spec, **kw):
+    return audit.audit_kernel(spec, **kw)
+
+
+def _gating(result, kind):
+    return [f for f in result.findings if f.gating and f.kind == kind]
+
+
+# ------------------------------------------------------------ the domain
+
+
+class TestIntervalDomain:
+    def test_mul_covers_sign_combinations(self):
+        r = mul(_iv(-3, 5), _iv(-7, 2))
+        assert (r.lo, r.hi) == (-35.0, 21.0)
+        assert r.int_valued
+
+    def test_add_and_shift(self):
+        assert add(_iv(0, 10), _iv(5, 5)).hi == 15.0
+        s = shift_left(_iv(0, 255), _iv(4, 4))
+        assert (s.lo, s.hi) == (0.0, 255.0 * 16)
+
+    def test_bit_or_envelope_is_tight_for_disjoint_fields(self):
+        # lo | (msp << 11): the envelope must not double past the sum,
+        # which is what lets the seqmul assembly land at exactly 2^24-1.
+        r = bit_or(_iv(0, 2**11 - 1), _iv(0, 2**24 - 2**11))
+        assert r.hi == 2**24 - 1.0
+
+    def test_bit_or_envelope_pow2_cap(self):
+        # same-width operands: |a|b| never needs more bits than the
+        # wider operand, so 255|255 stays 255 (not 510).
+        assert bit_or(_iv(0, 255), _iv(0, 255)).hi == 255.0
+
+    def test_xor_lower_bound_is_zero(self):
+        # xor can cancel equal operands; max(a.lo, b.lo) would be unsound.
+        r = bit_or(_iv(8, 255), _iv(8, 255), is_xor=True)
+        assert r.lo == 0.0
+
+    def test_bit_or_negative_operand_falls_back_to_top(self):
+        r = bit_or(_iv(-1, 255), _iv(0, 255))
+        assert r.hi == float("inf")
+
+
+# ---------------------------------------------- derived-bound rediscovery
+
+
+class TestBoundRediscovery:
+    def test_seqmul_n12_certifies_at_exact_f32_frontier(self):
+        res = _audit(contracts.kernel_trace("seqmul_gemm", 12, 6),
+                     family="kernel", mode="seqmul_gemm", n=12, t=6)
+        assert res.certified, [f.message for f in res.findings]
+        # the assembled product envelope is exactly 2^24 - 1: the bound
+        # is *derived*, with no slack to spare.
+        assert any(v == float(2**24 - 1) for v in res.facts.values())
+
+    def test_seqmul_n13_rejected_statically(self):
+        res = _audit(contracts.kernel_trace("seqmul_gemm", 13, 6),
+                     family="kernel", mode="seqmul_gemm", n=13, t=6)
+        assert not res.certified
+        assert _gating(res, "exactness") or _gating(res, "trace-rejected")
+
+    def test_packed_single_n15_certifies_n16_breaks_contract(self):
+        ok = _audit(contracts.kernel_trace("packed_single", 15, 7),
+                    family="elementwise", mode="packed_single", n=15, t=7)
+        assert ok.certified, [f.message for f in ok.findings]
+        bad = _audit(contracts.kernel_trace("packed_single", 16, 8),
+                     family="elementwise", mode="packed_single", n=16, t=8)
+        assert not bad.certified
+        assert _gating(bad, "contract"), [f.message for f in bad.findings]
+
+    def test_two_word_kernel_carries_n16(self):
+        res = _audit(contracts.kernel_trace("packed_words", 16, 8),
+                     family="elementwise", mode="packed_words", n=16, t=8)
+        assert res.certified, [f.message for f in res.findings]
+
+
+# --------------------------------------------------- seeded mutation checks
+
+
+class TestSeededMutations:
+    """Each mutation re-introduces a bug class the auditor exists to
+    catch; every one must produce a gating finding."""
+
+    def test_widened_carry_weight_overflows_f32_exactness(self):
+        n, t = 12, 6
+        lo_max = float(2 ** (n - 1) - 1)
+        lsp_max = float(2**t - 1)
+        msp_max = float(2 ** (n - t + 1) - 1)
+        ranges = [
+            ValueRange(0.0, lo_max, int_valued=True),
+            ValueRange(0.0, lsp_max, int_valued=True),
+            ValueRange(0.0, msp_max, int_valued=True),
+        ]
+
+        def assemble(weight):
+            def fn(lo, s_lsp, s_msp):
+                return lo + jnp.float32(weight) * (
+                    s_lsp + jnp.float32(2.0**t) * s_msp)
+            return fn
+
+        args = [sds((8, 8), jnp.float32)] * 3
+        good = _audit(TraceSpec(name="assembly", fn=assemble(2.0 ** (n - 1)),
+                                args=args, ranges=ranges))
+        assert good.certified
+        # mutation: widen the carry weight 2^(n-1) -> 2^n; the assembled
+        # product now exceeds the 2^24 exact-f32 frontier.
+        bad = _audit(TraceSpec(name="assembly-widened", fn=assemble(2.0**n),
+                               args=args, ranges=ranges))
+        assert not bad.certified
+        assert _gating(bad, "exactness")
+
+    def test_dropped_gather_clamp_is_caught(self):
+        table = jnp.zeros((256,), jnp.float32)
+        idx_range = [ValueRange(0.0, 256.0, int_valued=True)]  # one past end
+        args = [sds((16,), jnp.int32)]
+
+        clamped = _audit(TraceSpec(
+            name="gather-clamped",
+            fn=lambda idx: table[jnp.clip(idx, 0, 255)],
+            args=args, ranges=idx_range))
+        assert clamped.certified
+        # mutation: drop the clamp; the index envelope now leaves the table.
+        unclamped = _audit(TraceSpec(
+            name="gather-unclamped", fn=lambda idx: table[idx],
+            args=args, ranges=idx_range))
+        assert not unclamped.certified
+        assert _gating(unclamped, "gather")
+
+    def test_oversized_tile_rejected_by_budget(self):
+        with pytest.raises(TileBudgetError) as ei:
+            validate_tiles("seqmul", 8, 4, (256, 256, 256))
+        msg = str(ei.value)
+        assert "seqmul" in msg and "n=8" in msg
+
+    def test_non_power_of_two_tile_rejected(self):
+        with pytest.raises(TileBudgetError) as ei:
+            validate_tiles("seqmul", 8, 4, (48, 32, 32))
+        assert "power" in str(ei.value)
+
+
+# ------------------------------------------------------------ VMEM model
+
+
+class TestVmemModel:
+    def test_deployed_tiles_fit_for_every_mode(self):
+        for mode in ("seqmul", "bitexact", "lowrank", "inject"):
+            tiles = engine_config.kernel_tiles(mode, 8, 4)
+            rep = tile_footprint(mode, 8, 4, (tiles.bm, tiles.bn, tiles.bk))
+            assert rep.within_budget, (mode, rep.total_bytes)
+
+    def test_footprint_monotone_in_tiles(self):
+        small = tile_footprint("seqmul", 8, 4, (32, 32, 32))
+        large = tile_footprint("seqmul", 8, 4, (64, 64, 64))
+        assert small.total_bytes < large.total_bytes <= VMEM_BUDGET_BYTES * 8
+
+    def test_traced_attention_vmem_within_budget(self):
+        res = _audit(contracts.attention_trace("bitexact", 8, 2),
+                     family="attention", mode="bitexact", n=8, t=2)
+        assert res.certified, [f.message for f in res.findings]
+        assert res.vmem and all(e["within_budget"] for e in res.vmem)
+
+
+# ------------------------------------------------------- matrix & gating
+
+
+class TestMatrixAndGates:
+    def test_full_matrix_has_zero_unproven_kernels(self):
+        results = audit.audit_matrix()
+        bad = [(r.name, [f.message for f in r.findings])
+               for r in results if not r.certified]
+        assert not bad, bad
+        assert len(results) >= 20
+
+    def test_resolve_t_cannot_return_uncertified(self, monkeypatch):
+        budget = engine_config.get_tier("balanced").budgets[0][1]
+        p = engine_config.resolve_t(8, budget, mode="seqmul")
+        assert audit.certified("seqmul", 8, p.t)
+        # force every verdict negative: resolve_t must refuse rather
+        # than hand out an unproven (n, t).
+        monkeypatch.setattr(audit, "certified", lambda *a, **k: False)
+        with pytest.raises(engine_config.QualityError, match="certification"):
+            engine_config.resolve_t(8, budget, mode="seqmul")
+
+    def test_dispatch_gate_refuses_uncertified_pallas(self, monkeypatch):
+        import numpy as np
+
+        from repro.engine import dispatch
+
+        monkeypatch.setenv("REPRO_STATIC_AUDIT", "1")
+        monkeypatch.setattr(audit, "certified", lambda *a, **k: False)
+        x = jnp.asarray(np.ones((8, 8), np.float32))
+        with pytest.raises(audit.CertificationError, match="seqmul"):
+            dispatch.matmul(x, x, n=8, t=4, mode="seqmul", backend="pallas")
+        # reference backend never goes through the gate
+        dispatch.matmul(x, x, n=8, t=4, mode="seqmul", backend="reference")
+
+    def test_contract_findings_are_gating(self):
+        assert "contract" in interp.GATING_KINDS
+        assert "note" not in interp.GATING_KINDS
+
+    def test_report_is_machine_readable(self):
+        rep = audit.report()
+        assert rep["all_certified"] is True
+        assert rep["vmem_budget_bytes"] == VMEM_BUDGET_BYTES
+        entry = rep["entries"][0]
+        assert {"name", "family", "certified", "findings", "vmem"} <= set(entry)

@@ -1,0 +1,120 @@
+"""Eager dispatch-time (n, t) rejection across every mode boundary.
+
+Each structural limit the static auditor derives (`tests/test_analysis`)
+is also enforced eagerly at dispatch, with the mode named in the error —
+these tests pin the messages so a widened kernel cannot silently ship
+behind a stale guard."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.kernels.approx_attention import validate_attn_mode
+from repro.kernels.seqmul_kernel import seqmul_pallas_words
+
+
+def _ops(m=8, k=8, n_out=8):
+    return (jnp.asarray(np.ones((m, k)), jnp.float32),
+            jnp.asarray(np.ones((k, n_out)), jnp.float32))
+
+
+# one past each mode's structural ceiling; the message must name the
+# mode and the limit so the failure is actionable from a model stack.
+_OVER_LIMIT = [
+    ("bitexact", 9, 4, "n <= 8"),
+    ("lowrank", 9, 4, "n <= 8"),
+    ("seqmul", 13, 6, "n <= 12"),
+    ("inject", 16, 8, "n <= 15"),
+    ("fakequant", 24, 12, "n <= 23"),
+]
+
+
+@pytest.mark.parametrize("mode,n,t,limit", _OVER_LIMIT)
+def test_matmul_rejects_over_limit_n_eagerly(mode, n, t, limit):
+    x, w = _ops()
+    with pytest.raises(ValueError) as ei:
+        engine.matmul(x, w, n=n, t=t, mode=mode,
+                      **({"key": jnp.zeros((2,), jnp.uint32)}
+                         if engine.get_mode(mode).needs_key else {}))
+    msg = str(ei.value)
+    assert repr(mode) in msg or f"mode '{mode}'" in msg
+    assert limit in msg
+
+
+# widest n each mode actually dispatches at (inject's error LUT caps at
+# n=10 even though its int16 packing admits 15)
+_ACCEPT = [
+    ("bitexact", 8, 4),
+    ("lowrank", 8, 4),
+    ("seqmul", 12, 6),
+    ("inject", 10, 5),
+    ("fakequant", 23, 11),
+]
+
+
+@pytest.mark.parametrize("mode,n,t", _ACCEPT)
+def test_widest_supported_n_is_accepted(mode, n, t):
+    """The eager guard must not misfire below each mode's ceiling."""
+    x, w = _ops()
+    kw = {}
+    if engine.get_mode(mode).needs_key:
+        kw["key"] = engine_key()
+    out = engine.matmul(x, w, n=n, t=t, mode=mode,
+                        backend="reference", **kw)
+    assert out.shape == (8, 8)
+
+
+def engine_key():
+    import jax
+
+    return jax.random.PRNGKey(0)
+
+
+def test_multiply_rejects_packed_2n_32():
+    a = jnp.ones((4,), jnp.uint32)
+    with pytest.raises(ValueError) as ei:
+        engine.multiply(a, a, n=16, t=8)
+    msg = str(ei.value)
+    assert "seqmul_approx" in msg
+    assert "2n <= 31" in msg
+    assert "seqmul_pallas_words" in msg  # the documented escape hatch
+
+
+def test_multiply_accepts_packed_boundary_n15():
+    a = jnp.asarray([3], jnp.uint32)
+    out = engine.multiply(a, a, n=15, t=7, backend="reference")
+    assert out.dtype == jnp.uint32
+
+
+def test_two_word_kernel_rejects_n17():
+    a = jnp.ones((4,), jnp.uint32)
+    with pytest.raises(ValueError) as ei:
+        seqmul_pallas_words(a, a, n=17, t=8)
+    msg = str(ei.value)
+    assert "n <= 16" in msg
+    assert "two-word" in msg
+
+
+def test_attention_rejects_n9():
+    with pytest.raises(ValueError) as ei:
+        validate_attn_mode("bitexact", 9)
+    msg = str(ei.value)
+    assert "n <= 8" in msg
+
+
+def test_invalid_split_t_names_mode():
+    x, w = _ops()
+    with pytest.raises(ValueError) as ei:
+        engine.matmul(x, w, n=8, t=8, mode="seqmul")
+    msg = str(ei.value)
+    assert "'seqmul'" in msg and "t <= n-1" in msg
+
+
+def test_tile_validation_error_names_mode_n_t():
+    from repro.analysis.vmem import TileBudgetError, validate_tiles
+
+    with pytest.raises(TileBudgetError) as ei:
+        validate_tiles("bitexact", 8, 4, (512, 512, 512))
+    msg = str(ei.value)
+    assert "bitexact" in msg and "n=8" in msg and "t=4" in msg

@@ -1,7 +1,6 @@
 """Pallas flash-attention kernel vs. the models.attention oracle —
 forward and gradients, sweeping causal/window/softcap/GQA (interpret)."""
 
-import functools
 
 import jax
 import jax.numpy as jnp

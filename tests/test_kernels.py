@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import quantization
 from repro.engine import artifacts
 from repro.kernels import ops, ref
 from repro.kernels.lowrank_matmul import lowrank_matmul_pallas

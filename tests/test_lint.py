@@ -1,0 +1,49 @@
+"""Lint gate: `ruff check` over src/ and tests/ with the committed
+pyproject config.  Skips when ruff is not installed (the CI
+static-analysis job installs it; the kernel image does not ship it)."""
+
+import pathlib
+import shutil
+import subprocess
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _ruff():
+    exe = shutil.which("ruff")
+    if exe:
+        return [exe]
+    probe = subprocess.run(
+        ["python", "-m", "ruff", "--version"], capture_output=True, cwd=REPO
+    )
+    if probe.returncode == 0:
+        return ["python", "-m", "ruff"]
+    return None
+
+
+@pytest.fixture(scope="module")
+def ruff_cmd():
+    cmd = _ruff()
+    if cmd is None:
+        pytest.skip("ruff not installed (CI installs it for the lint gate)")
+    return cmd
+
+
+def test_ruff_check_clean(ruff_cmd):
+    proc = subprocess.run(
+        [*ruff_cmd, "check", "src", "tests"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_ruff_config_committed(ruff_cmd):
+    """The lint surface is pinned by pyproject, not ruff defaults."""
+    assert (REPO / "pyproject.toml").read_text().count("[tool.ruff")
+    proc = subprocess.run(
+        [*ruff_cmd, "check", "--show-settings", "src/repro/__init__.py"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stderr

@@ -16,7 +16,6 @@ Three properties pin the subsystem down:
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

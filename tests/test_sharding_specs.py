@@ -2,15 +2,12 @@
 cache spec trees (pure functions — no multi-device runtime needed)."""
 
 import jax
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_config
 from repro.distributed.sharding import (
     _resolve_entry, param_spec, param_specs, resolve_spec,
 )
-from repro.launch.hlo_analysis import analyze_hlo
 from repro.models.registry import build_model
 
 SIZES = {"pod": 2, "data": 16, "model": 16}
