@@ -1,0 +1,93 @@
+"""Soak suite: traffic-realistic workloads through the schedulers, audited.
+
+Each row is one :func:`repro.serve.soak.run_soak` over a named workload
+preset (arrival process × length tails × tier mix) and a scheduler.
+Rows carry the invariant counters the soak harness audits — slot leaks,
+lost/duplicate serves, per-row write-position violations — plus the
+tail-latency picture (per-window worst TTFT p99/p999, drift vs the
+first window) and the seed, so any failure reproduces from the BENCH
+file alone (docs/serving.md §Soak testing).
+
+Gating: ``invariants_ok`` (1.0 ⇔ zero violations: the leak counters are
+0 in any healthy baseline, so a ratio gate on them would divide by zero
+— the boolean is the gateable form) and ``slot_utilization``
+(deterministic for a fixed queue).  Wall-clock metrics are recorded for
+trajectory plots but not gated — they swing with host load.
+
+``reduced=True`` is the CI-smoke size; the full run streams 20k
+requests per row and is the documented local soak
+(``python -m repro.launch.soak`` drives bigger ones).
+"""
+
+from __future__ import annotations
+
+import jax
+
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.registry import Suite, register_suite
+
+FULL = {"requests": 20000, "batch_size": 8, "prompt_len": 16, "max_new": 8,
+        "window_size": 1024}
+REDUCED = {"requests": 256, "batch_size": 4, "prompt_len": 8, "max_new": 6,
+           "window_size": 64}
+ARCH = "qwen3-0.6b"
+SEED = 0
+DRIFT_LIMIT = 50.0  # generous: CPU-host TTFT tails are noisy, leaks are not
+SPOT_CHECKS = 3
+
+# (workload preset, tier mix, pool quality, scheduler)
+CASES = (
+    ("steady", (), None, "continuous"),
+    ("bursty", ((None, 1.0), ("balanced", 3.0)), "balanced", "continuous"),
+    ("flood", (), None, "continuous"),
+    ("churn", (), None, "continuous"),
+    ("steady", (), None, "static"),
+)
+
+
+def rows(reduced: bool = False) -> list:
+    from repro.configs.registry import get_config
+    from repro.models.registry import build_model
+    from repro.serve.soak import run_soak
+    from repro.serve.workload import preset_spec
+
+    sizes = REDUCED if reduced else FULL
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    out = []
+    for workload, tier_mix, quality, scheduler in CASES:
+        spec = preset_spec(
+            workload, requests=sizes["requests"], prompt_len=sizes["prompt_len"],
+            max_new=sizes["max_new"], vocab_size=cfg.vocab_size, tier_mix=tier_mix,
+        )
+        report = run_soak(
+            model, params, spec,
+            batch_size=sizes["batch_size"], seed=SEED,
+            window_size=sizes["window_size"], scheduler=scheduler,
+            quality=quality, drift_limit=DRIFT_LIMIT, spot_check=SPOT_CHECKS,
+        )
+        out.append({"table": "serve_soak", "arch": ARCH,
+                    "drift_limit": DRIFT_LIMIT, **report.summary_row()})
+    return out
+
+
+register_suite(Suite(
+    name="serve_soak",
+    rows=rows,
+    description="workload-generator soak: arrival/tier mixes through the "
+                "schedulers with slot-accounting + tail-latency audits",
+    key_fields=("table", "arch", "workload", "tier_mix", "scheduler",
+                "requests", "batch_size", "window_size"),
+    higher_is_better=("invariants_ok", "slot_utilization"),
+))
+
+
+if __name__ == "__main__":
+    for r in rows(reduced=True):
+        print(r)

@@ -44,9 +44,15 @@ ARCHS = ("qwen3-0.6b",)
 APPROX = (None, "lowrank")  # exact serving + one approximate mode
 
 
-def _row(arch, mode, cfg_run, result, *, speedup=None) -> dict:
+def _p(values, q):
+    """Rounded percentile; None (empty distribution) stays None in the row."""
     from repro.serve.stats import percentile
 
+    p = percentile(values, q)
+    return None if p is None else round(p, 4)
+
+
+def _row(arch, mode, cfg_run, result, *, speedup=None) -> dict:
     stats = result.stats
     row = {
         "table": "serve_throughput",
@@ -64,10 +70,10 @@ def _row(arch, mode, cfg_run, result, *, speedup=None) -> dict:
         "requests_per_s": round(stats.requests_per_s, 2),
         "decode_steps": stats.decode_steps,
         "slot_utilization": round(stats.slot_utilization, 4),
-        "ttft_s_p50": round(percentile(stats.ttft_s, 50), 4),
-        "ttft_s_p95": round(percentile(stats.ttft_s, 95), 4),
-        "request_latency_s_p50": round(percentile(stats.request_latencies_s, 50), 4),
-        "request_latency_s_p95": round(percentile(stats.request_latencies_s, 95), 4),
+        "ttft_s_p50": _p(stats.ttft_s, 50),
+        "ttft_s_p95": _p(stats.ttft_s, 95),
+        "request_latency_s_p50": _p(stats.request_latencies_s, 50),
+        "request_latency_s_p95": _p(stats.request_latencies_s, 95),
         "devices": stats.devices,
     }
     if speedup is not None:

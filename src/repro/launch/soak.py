@@ -1,0 +1,127 @@
+"""Soak CLI: long traffic-realistic runs against the serving schedulers.
+
+Thin driver over :func:`repro.serve.soak.run_soak` (docs/serving.md
+§Soak testing): picks a workload preset from ``repro.serve.workload``,
+streams it through the continuous (or static) scheduler in bounded
+windows, prints a per-window audit line, and exits non-zero on any
+invariant violation — slot leaks, lost/duplicate serves, per-row
+write-position violations, TTFT-p99 drift beyond ``--drift-limit``, or
+a failed parity spot-check.
+
+  # the documented long local soak (~20k requests)
+  PYTHONPATH=src python -m repro.launch.soak --arch qwen3-0.6b --reduced \
+      --workload bursty --requests 20000 --batch 8 --prompt-len 16 --gen 8 \
+      --window 1024 --spot-check 8 --drift-limit 50
+
+  # CI runs the ~2k-request version of the same (gating soak-smoke job)
+
+``--json`` writes the report's summary row plus the per-window audits,
+seed included, so a red run reproduces from the artifact alone.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.engine import config as engine_config
+from repro.models.registry import build_model
+from repro.serve.soak import run_soak
+from repro.serve.workload import PRESETS, preset_spec
+
+__all__ = ["main"]
+
+
+def _parse_tier_mix(text):
+    """``"balanced=3,none=1"`` -> ((\"balanced\", 3.0), (None, 1.0))."""
+    if not text:
+        return ()
+    mix = []
+    for part in text.split(","):
+        name, _, weight = part.partition("=")
+        name = name.strip()
+        mix.append((None if name in ("none", "") else name,
+                    float(weight) if weight else 1.0))
+    return tuple(mix)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="serve the reduced() smoke config")
+    ap.add_argument("--workload", default="bursty", choices=sorted(PRESETS),
+                    help="traffic preset (arrival process + length tails)")
+    ap.add_argument("--requests", type=int, default=20000)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--window", type=int, default=1024,
+                    help="requests per bounded-memory audit window")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=("continuous", "static"))
+    ap.add_argument("--quality-tier", default=None,
+                    choices=engine_config.list_tiers(),
+                    help="pool accuracy tier; tier-tagged requests are "
+                         "checked against it at admission")
+    ap.add_argument("--tier-mix", default="",
+                    help="weighted request tier tags, e.g. 'balanced=3,none=1' "
+                         "(tags must match --quality-tier or be none)")
+    ap.add_argument("--drift-limit", type=float, default=50.0,
+                    help="max allowed later-window TTFT p99 / first-window p99 "
+                         "(<= 0 disables the drift gate)")
+    ap.add_argument("--spot-check", type=int, default=4,
+                    help="request ids re-served alone/unpadded and bit-compared")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the report (summary row + per-window audits)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    spec = preset_spec(
+        args.workload, requests=args.requests, prompt_len=args.prompt_len,
+        max_new=args.gen, vocab_size=cfg.vocab_size,
+        tier_mix=_parse_tier_mix(args.tier_mix),
+    )
+
+    def progress(w):
+        tail = f"{1e3 * w.ttft_p99_s:.0f}ms" if w.ttft_p99_s is not None else "n/a"
+        flag = "" if not w.violations else f"  !! {'; '.join(w.violations)}"
+        print(f"# window {w.index:4d}: {w.requests} reqs, {w.tokens_out} toks, "
+              f"{w.slot_utilization:.0%} util, ttft p99 {tail}{flag}", flush=True)
+
+    report = run_soak(
+        model, params, spec,
+        batch_size=args.batch, seed=args.seed, window_size=args.window,
+        scheduler=args.scheduler, quality=args.quality_tier,
+        drift_limit=args.drift_limit if args.drift_limit > 0 else None,
+        spot_check=args.spot_check, progress=progress,
+    )
+
+    print(report.describe())
+    if args.json:
+        doc = {
+            "summary": report.summary_row(),
+            "windows": [dataclasses.asdict(w) for w in report.windows],
+            "violations": list(report.violations),
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True, default=float)
+            f.write("\n")
+        print(f"# wrote {args.json}")
+    for v in report.violations:
+        print(f"VIOLATION: {v}", file=sys.stderr)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,8 +9,13 @@ Public surface:
   per-row retirement.
 * ``static_serve_loop`` — the legacy static-batch loop, kept as baseline
   and parity oracle.
-* :class:`~repro.serve.stats.ServeStats` / ``ServeResult`` — what a run
-  measures and returns.
+* :class:`~repro.serve.stats.ServeStats` / ``ServeResult`` /
+  ``SlotAccounting`` — what a run measures and returns.
+* :class:`~repro.serve.workload.WorkloadSpec` / ``preset_spec`` —
+  traffic-realistic workload generation (arrival processes, long-tail
+  lengths, tier mixes, abuse presets).
+* :func:`~repro.serve.soak.run_soak` / ``SoakReport`` — the windowed
+  soak harness auditing slot-accounting and tail-latency invariants.
 """
 
 from repro.serve.request import Request, RequestStats, synth_requests
@@ -20,7 +25,9 @@ from repro.serve.scheduler import (
     static_serve_loop,
     supports_continuous,
 )
-from repro.serve.stats import ServeResult, ServeStats
+from repro.serve.soak import SoakReport, run_soak
+from repro.serve.stats import ServeResult, ServeStats, SlotAccounting
+from repro.serve.workload import Workload, WorkloadSpec, preset_spec
 
 __all__ = [
     "Request",
@@ -32,4 +39,10 @@ __all__ = [
     "supports_continuous",
     "ServeResult",
     "ServeStats",
+    "SlotAccounting",
+    "Workload",
+    "WorkloadSpec",
+    "preset_spec",
+    "SoakReport",
+    "run_soak",
 ]

@@ -72,10 +72,32 @@ def synth_requests(
     vary_budget: bool = True,
     eos_id: Optional[int] = None,
     quality: Optional[str] = None,
+    workload: Optional[str] = None,
+    tier_mix: tuple = (),
 ) -> list[Request]:
     """Deterministic mixed workload: prompt lengths in [min_prompt, prompt_len],
     budgets in [1, gen] (or all ``gen`` when ``vary_budget=False``);
-    ``quality`` tags every request with an accuracy tier name."""
+    ``quality`` tags every request with an accuracy tier name.
+
+    ``workload`` opts into a :mod:`repro.serve.workload` traffic preset
+    (``"steady"``/``"bursty"``/``"flood"``/``"churn"``): the request list
+    is then drawn from that preset's arrival/length/tier models
+    (``tier_mix`` weights tier tags; it defaults to tagging everything
+    ``quality`` when that is set).  The default (``workload=None``) is
+    the legacy uniform draw, byte-stable for a given seed — existing
+    suites and committed BENCH baselines see identical queues.
+    """
+    if workload is not None:
+        from repro.serve import workload as wl
+
+        if not tier_mix and quality is not None:
+            tier_mix = ((quality, 1.0),)
+        spec = wl.preset_spec(
+            workload, requests=count, prompt_len=prompt_len, max_new=gen,
+            vocab_size=vocab_size, tier_mix=tier_mix, eos_id=eos_id,
+            min_prompt=min(min_prompt, prompt_len),
+        )
+        return [req for req, _ in wl.iter_requests(spec, seed)]
     rng = np.random.default_rng(seed)
     out: list[Request] = []
     for i in range(count):

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.request import Request, RequestStats
-from repro.serve.stats import ServeResult, ServeStats
+from repro.serve.stats import ServeResult, ServeStats, SlotAccounting
 from repro.train.steps import make_decode_step, make_prefill_step
 
 __all__ = [
@@ -304,6 +304,16 @@ class ContinuousScheduler:
         prefill_s = decode_s = 0.0
         step = 0
         busy_row_steps = 0
+        # slot-accounting ledger (see stats.SlotAccounting): counted as the
+        # loop runs, so the soak harness audits the scheduler itself rather
+        # than re-deriving "what must have happened" from the retired list
+        seated_total = 0
+        pool_seats = 0
+        admission_seats = 0
+        max_live = 0
+        seat_counts = [0] * B
+        last_write = [0] * B  # per-slot last physical KV write index
+        position_violations = 0
 
         t0 = time.perf_counter()
 
@@ -321,7 +331,18 @@ class ContinuousScheduler:
             outputs[s.req.id] = np.asarray(s.tokens, np.int32)
             slots[i] = None
 
-        def seat(i: int, req: Request, tok0: int, t_first: float) -> None:
+        def seat(i: int, req: Request, tok0: int, t_first: float,
+                 *, pool: bool = False) -> None:
+            nonlocal seated_total, pool_seats, admission_seats
+            seated_total += 1
+            seat_counts[i] += 1
+            if pool:
+                pool_seats += 1
+            else:
+                admission_seats += 1
+            # admission prefill wrote cache indices [0, P); the row's first
+            # decode write lands at exactly P
+            last_write[i] = P - 1
             slot = _Slot(req=req, tokens=[], admit_step=step, t_first=t_first)
             slot.absorb(tok0)
             cur_tok[i, 0] = tok0
@@ -342,7 +363,7 @@ class ContinuousScheduler:
                 t_b = time.perf_counter()
                 prefill_s += t_b - t0
                 for i, req in enumerate(first):
-                    seat(i, req, int(tok0s[i]), t_b)
+                    seat(i, req, int(tok0s[i]), t_b, pool=True)
             else:
                 caches = self.model.init_caches(B, self.capacity, self._cache_dtype)
             while True:
@@ -361,6 +382,7 @@ class ContinuousScheduler:
                 live = [i for i in range(B) if slots[i] is not None]
                 if not live:
                     break
+                max_live = max(max_live, len(live))
 
                 # one pool decode step: per-row true position + write slot
                 pos = np.zeros((B,), np.int32)
@@ -370,6 +392,17 @@ class ContinuousScheduler:
                         s = slots[i]
                         pos[i] = s.req.prompt_len + s.emitted - 1
                         write[i] = P + s.emitted - 1
+                        # invariants: the physical write index advances by
+                        # exactly one slot per step, stays inside the cache,
+                        # and the true position is the write index shifted by
+                        # the row's (constant) pad offset
+                        if (
+                            write[i] != last_write[i] + 1
+                            or write[i] >= self.capacity
+                            or pos[i] != write[i] - (P - s.req.prompt_len)
+                        ):
+                            position_violations += 1
+                        last_write[i] = int(write[i])
                     else:  # dead lane: park at the last slot, offset 0
                         pos[i] = write[i] = self.capacity - 1
                 t_d = time.perf_counter()
@@ -401,7 +434,17 @@ class ContinuousScheduler:
             request_latencies_s=tuple(r.latency_s for r in retired),
             quality=self.quality or "",
         )
-        return ServeResult(stats=stats, request_stats=tuple(retired), outputs=outputs)
+        accounting = SlotAccounting(
+            seated=seated_total,
+            retired=len(retired),
+            pool_prefill_seats=pool_seats,
+            admission_seats=admission_seats,
+            max_live=max_live,
+            slot_reuse=tuple(seat_counts),
+            position_violations=position_violations,
+        )
+        return ServeResult(stats=stats, request_stats=tuple(retired),
+                           outputs=outputs, accounting=accounting)
 
 
 def continuous_serve_loop(
@@ -501,11 +544,13 @@ def static_serve_loop(
     total_steps = 0
     busy_row_steps = 0
     total_row_steps = 0
+    max_live = 0
 
     t0 = time.perf_counter()
     while queue:
         t_batch = time.perf_counter()
         batch_reqs = [queue.popleft() for _ in range(min(batch_size, len(queue)))]
+        max_live = max(max_live, len(batch_reqs))
         caches, logits = prefill(params, make_batch(batch_reqs))
         jax.block_until_ready(logits)
         t_prefill = time.perf_counter()
@@ -563,4 +608,18 @@ def static_serve_loop(
         request_latencies_s=tuple(r.latency_s for r in retired),
         quality=pool_tier or "",
     )
-    return ServeResult(stats=stats, request_stats=tuple(retired), outputs=outputs)
+    # the static loop has no slot pool: every request is seated by its
+    # batch prefill and retired when the batch drains, so conservation is
+    # structural — the ledger still reports it so soak audits run on both
+    # schedulers with one code path
+    accounting = SlotAccounting(
+        seated=len(retired),
+        retired=len(retired),
+        pool_prefill_seats=len(retired),
+        admission_seats=0,
+        max_live=max_live,
+        slot_reuse=(),
+        position_violations=0,
+    )
+    return ServeResult(stats=stats, request_stats=tuple(retired),
+                       outputs=outputs, accounting=accounting)

@@ -1,0 +1,383 @@
+"""Soak harness: stream a workload through a scheduler, audit every window.
+
+This is the falsifier behind the ROADMAP's "heavy traffic" claims: tens
+of thousands of :mod:`repro.serve.workload` requests stream through
+:class:`~repro.serve.scheduler.ContinuousScheduler` (or the static
+baseline) in **bounded-memory windows**, and after every window the
+driver audits the invariants a slot-pool scheduler must keep under
+realistic traffic:
+
+* **Slot conservation** — the scheduler's own
+  :class:`~repro.serve.stats.SlotAccounting` ledger must balance
+  (``seated == retired``: no slot leaks) and every window request must
+  be served exactly once (no losses, no duplicates across windows).
+* **Monotone per-row positions** — per-slot KV write indices advance by
+  exactly one physical slot per decode step and stay inside the cache
+  (``position_violations == 0``, counted inside the decode loop itself).
+* **Bounded outputs** — every retired request emitted between 1 and its
+  budget of tokens.
+* **Tail-latency stability** — per-window TTFT p99/p999; the drift of
+  later windows' p99 against the first window is the leak detector a
+  counter can't express (a slow leak shows up as monotonically rising
+  tails long before anything crashes).
+* **Parity spot-checks** — sampled request ids are re-served alone,
+  unpadded, through the static oracle and must bit-match the soak
+  stream.  Only on *exact* continuous pools: the static loop's
+  shared-``arange`` positions make its own padded streams diverge from
+  unpadded by construction, and approximate tiers quantize with
+  batch-dependent artifacts, so their bit-parity is only defined
+  batch-for-batch (continuous ≡ static at the same batch, pinned by
+  ``tests/test_serve_scheduler.py``), not across batch compositions.
+
+``run_soak`` returns a :class:`SoakReport`; ``report.ok`` is the CI
+verdict and ``report.summary_row()`` the flat dict the ``serve_soak``
+benchmark suite emits.  The CLI lives at ``repro.launch.soak``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.serve.scheduler import (
+    ContinuousScheduler,
+    _apply_pool_quality,
+    static_serve_loop,
+)
+from repro.serve.stats import percentile
+from repro.serve.workload import WorkloadSpec, iter_windows, tier_mix_label
+
+__all__ = ["WindowAudit", "SoakReport", "run_soak"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowAudit:
+    """What one window measured and whether its invariants held."""
+
+    index: int
+    requests: int
+    tokens_out: int
+    decode_steps: int
+    wall_s: float
+    slot_utilization: float
+    seated: int
+    retired: int
+    slot_leaks: int
+    position_violations: int
+    lost_requests: int
+    duplicate_serves: int
+    max_live: int
+    offered_rps: float  # arrival rate offered by this window's slice
+    ttft_p50_s: Optional[float]
+    ttft_p99_s: Optional[float]
+    ttft_p999_s: Optional[float]
+    violations: tuple  # of str; empty == clean window
+
+
+@dataclasses.dataclass(frozen=True)
+class SoakReport:
+    """Aggregate verdict of one soak run."""
+
+    workload: str
+    arrival: str
+    tier_mix: str
+    scheduler: str
+    quality: str
+    seed: int
+    requests: int
+    batch_size: int
+    window_size: int
+    windows: tuple  # of WindowAudit
+    retirement_order: tuple  # request ids in global retirement order
+    slot_reuse: tuple  # per-slot seat counts summed over windows
+    ttft_drift_p99: float  # max later-window p99 / first-window p99
+    drift_limit: Optional[float]
+    spot_checks: int
+    spot_check_failures: int
+    violations: tuple  # of str, aggregated over windows + run-level checks
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    @property
+    def tokens_out(self) -> int:
+        return sum(w.tokens_out for w in self.windows)
+
+    @property
+    def wall_s(self) -> float:
+        return sum(w.wall_s for w in self.windows)
+
+    @property
+    def decode_steps(self) -> int:
+        return sum(w.decode_steps for w in self.windows)
+
+    @property
+    def slot_utilization(self) -> float:
+        """Decode-step-weighted mean slot utilization over windows."""
+        steps = sum(w.decode_steps for w in self.windows)
+        if steps == 0:
+            return 1.0
+        return sum(w.slot_utilization * w.decode_steps for w in self.windows) / steps
+
+    @property
+    def reuse_spread(self) -> int:
+        if not self.slot_reuse:
+            return 0
+        return int(max(self.slot_reuse) - min(self.slot_reuse))
+
+    def summary_row(self) -> dict:
+        """Flat dict for the ``serve_soak`` BENCH rows (and ``--json``)."""
+        wall = self.wall_s
+        ttft_all_p50 = percentile([w.ttft_p50_s for w in self.windows
+                                   if w.ttft_p50_s is not None], 50)
+        worst_p99 = max((w.ttft_p99_s for w in self.windows
+                         if w.ttft_p99_s is not None), default=None)
+        worst_p999 = max((w.ttft_p999_s for w in self.windows
+                          if w.ttft_p999_s is not None), default=None)
+        return {
+            "workload": self.workload,
+            "arrival": self.arrival,
+            "tier_mix": self.tier_mix,
+            "scheduler": self.scheduler,
+            "quality": self.quality,
+            "seed": self.seed,
+            "requests": self.requests,
+            "batch_size": self.batch_size,
+            "window_size": self.window_size,
+            "window_count": len(self.windows),
+            "tokens_out": self.tokens_out,
+            "decode_steps": self.decode_steps,
+            "wall_s": round(wall, 4),
+            "tokens_per_s": round(self.tokens_out / wall, 2) if wall > 0 else 0.0,
+            "slot_utilization": round(self.slot_utilization, 4),
+            "seated": sum(w.seated for w in self.windows),
+            "retired": sum(w.retired for w in self.windows),
+            "slot_leaks": sum(w.slot_leaks for w in self.windows),
+            "position_violations": sum(w.position_violations for w in self.windows),
+            "lost_requests": sum(w.lost_requests for w in self.windows),
+            "duplicate_serves": sum(w.duplicate_serves for w in self.windows),
+            "max_live": max((w.max_live for w in self.windows), default=0),
+            "reuse_spread": self.reuse_spread,
+            "ttft_p50_s": None if ttft_all_p50 is None else round(ttft_all_p50, 4),
+            "ttft_p99_s_worst": None if worst_p99 is None else round(worst_p99, 4),
+            "ttft_p999_s_worst": None if worst_p999 is None else round(worst_p999, 4),
+            "ttft_drift_p99": round(self.ttft_drift_p99, 3),
+            "spot_checks": self.spot_checks,
+            "spot_check_failures": self.spot_check_failures,
+            "violation_count": len(self.violations),
+            "invariants_ok": 1.0 if self.ok else 0.0,
+        }
+
+    def describe(self) -> str:
+        verdict = "PASS" if self.ok else f"FAIL ({len(self.violations)} violations)"
+        return (
+            f"[soak {self.workload}/{self.scheduler}] {self.requests} requests "
+            f"in {len(self.windows)} windows of {self.window_size}: "
+            f"{self.tokens_out} tokens, {self.slot_utilization:.0%} slot util, "
+            f"ttft p99 drift {self.ttft_drift_p99:.2f}x, "
+            f"{self.spot_checks - self.spot_check_failures}/{self.spot_checks} "
+            f"parity spot-checks — {verdict}"
+        )
+
+
+def _audit_window(k, window_reqs, times, result, served_ids) -> WindowAudit:
+    """Cross-check one window's ServeResult against what was offered."""
+    stats, acct = result.stats, result.accounting
+    by_id = {r.id: r for r in window_reqs}
+    out_ids = set(result.outputs)
+    lost = sorted(set(by_id) - out_ids)
+    alien = sorted(out_ids - set(by_id))
+    dup = sorted(out_ids & served_ids)
+    served_ids |= out_ids
+
+    violations = []
+    if stats.requests != len(window_reqs):
+        violations.append(
+            f"window {k}: served {stats.requests} of {len(window_reqs)} requests"
+        )
+    if lost:
+        violations.append(f"window {k}: lost requests {lost[:8]}")
+    if alien:
+        violations.append(f"window {k}: served ids never offered {alien[:8]}")
+    if dup:
+        violations.append(f"window {k}: ids served twice {dup[:8]}")
+    if acct.slot_leaks != 0:
+        violations.append(
+            f"window {k}: slot leak — seated {acct.seated} != retired {acct.retired}"
+        )
+    if acct.position_violations != 0:
+        violations.append(
+            f"window {k}: {acct.position_violations} per-row write-position violations"
+        )
+    for rs in result.request_stats:
+        req = by_id.get(rs.id)
+        if req is not None and not 1 <= rs.tokens_out <= req.max_new:
+            violations.append(
+                f"window {k}: request {rs.id} emitted {rs.tokens_out} tokens "
+                f"(budget {req.max_new})"
+            )
+            break  # one representative per window keeps the report readable
+
+    span = times[-1] - times[0] if len(times) > 1 else 0.0
+    return WindowAudit(
+        index=k,
+        requests=len(window_reqs),
+        tokens_out=stats.tokens_out,
+        decode_steps=stats.decode_steps,
+        wall_s=stats.wall_s,
+        slot_utilization=stats.slot_utilization,
+        seated=acct.seated,
+        retired=acct.retired,
+        slot_leaks=acct.slot_leaks,
+        position_violations=acct.position_violations,
+        lost_requests=len(lost),
+        duplicate_serves=len(dup),
+        max_live=acct.max_live,
+        offered_rps=len(window_reqs) / span if span > 0 else float("inf"),
+        ttft_p50_s=percentile(stats.ttft_s, 50),
+        ttft_p99_s=percentile(stats.ttft_s, 99),
+        ttft_p999_s=percentile(stats.ttft_s, 99.9),
+        violations=tuple(violations),
+    )
+
+
+def run_soak(
+    model,
+    params,
+    spec: WorkloadSpec,
+    *,
+    batch_size: int,
+    seed: int = 0,
+    window_size: int = 256,
+    scheduler: str = "continuous",
+    quality=None,
+    drift_limit: Optional[float] = None,
+    spot_check: int = 0,
+    progress: Optional[Callable[[WindowAudit], None]] = None,
+) -> SoakReport:
+    """Stream ``spec``'s workload through the scheduler, window by window.
+
+    Args:
+      spec, seed: the workload draw (``workload.iter_windows(spec, seed)``).
+      batch_size: slot-pool size; the prompt bucket / generation capacity
+        come from ``spec.prompt_len`` / ``spec.max_new``.
+      window_size: requests per window; one window is materialized at a
+        time and each runs to completion before it is audited.
+      scheduler: ``"continuous"`` or ``"static"`` (the baseline loop;
+        parity spot-checks are skipped there, see module docstring).
+      quality: pool accuracy tier; tier-tagged requests in the workload
+        are checked against it at admission.
+      drift_limit: if set, a later window's TTFT p99 exceeding
+        ``drift_limit`` times the first window's is a violation.
+      spot_check: number of request ids (sampled deterministically from
+        the seed) to re-serve alone, unpadded, and bit-compare.  Runs
+        only on exact continuous pools (``quality=None``) — see the
+        module docstring for why approx tiers have no cross-batch
+        oracle; skipped checks report as ``spot_checks == 0``.
+      progress: optional callback invoked with each :class:`WindowAudit`.
+    """
+    if scheduler not in ("continuous", "static"):
+        raise ValueError(f"scheduler must be continuous|static, got {scheduler!r}")
+    if spot_check < 0:
+        raise ValueError(f"spot_check must be >= 0, got {spot_check}")
+
+    sample_ids: set = set()
+    if spot_check and scheduler == "continuous" and quality is None:
+        picker = np.random.default_rng(seed + 1)
+        sample_ids = set(
+            int(i) for i in picker.choice(
+                spec.requests, size=min(spot_check, spec.requests), replace=False
+            )
+        )
+    sampled: dict = {}  # id -> (Request, np.ndarray soak stream)
+
+    sched = None
+    if scheduler == "continuous":
+        sched = ContinuousScheduler(
+            model, params, batch_size=batch_size, prompt_len=spec.prompt_len,
+            max_new=spec.max_new, quality=quality,
+        )
+        sched.warmup()
+        pool_tier = sched.quality
+    else:
+        pool_tier = _apply_pool_quality(model, quality)[1]
+
+    served_ids: set = set()
+    windows: list[WindowAudit] = []
+    violations: list[str] = []
+    retirement_order: list[int] = []
+    slot_reuse: Optional[list] = None
+
+    for k, (window_reqs, times) in enumerate(iter_windows(spec, seed, window_size)):
+        if scheduler == "continuous":
+            result = sched.run(window_reqs, warmup=False)
+        else:
+            result = static_serve_loop(
+                model, params, window_reqs, batch_size=batch_size,
+                prompt_len=spec.prompt_len, gen=spec.max_new,
+                warmup=(k == 0), quality=quality,
+            )
+        audit = _audit_window(k, window_reqs, times, result, served_ids)
+        windows.append(audit)
+        violations.extend(audit.violations)
+        retirement_order.extend(rs.id for rs in result.request_stats)
+        acct = result.accounting
+        if acct.slot_reuse:
+            if slot_reuse is None:
+                slot_reuse = [0] * len(acct.slot_reuse)
+            for i, n in enumerate(acct.slot_reuse):
+                slot_reuse[i] += n
+        for req in window_reqs:
+            if req.id in sample_ids and req.id in result.outputs:
+                sampled[req.id] = (req, result.outputs[req.id])
+        if progress is not None:
+            progress(audit)
+
+    # tail-latency drift: later windows against the first window's p99
+    drift = 1.0
+    baselines = [w.ttft_p99_s for w in windows if w.ttft_p99_s is not None]
+    if len(baselines) > 1 and baselines[0] > 0:
+        drift = max(p / baselines[0] for p in baselines[1:])
+        if drift_limit is not None and drift > drift_limit:
+            violations.append(
+                f"ttft p99 drift {drift:.2f}x exceeds limit {drift_limit:.2f}x"
+            )
+
+    # parity spot-checks: the sampled soak streams must bit-match the same
+    # request served alone, unpadded, through the static oracle
+    failures = 0
+    for rid in sorted(sampled):
+        req, stream = sampled[rid]
+        alone = static_serve_loop(
+            model, params, [req], batch_size=1, prompt_len=req.prompt_len,
+            gen=req.max_new, warmup=False, quality=quality,
+        )
+        if not np.array_equal(alone.outputs[rid], stream):
+            failures += 1
+            violations.append(
+                f"spot-check: request {rid} soak stream diverged from the "
+                f"unpadded single-request oracle"
+            )
+
+    return SoakReport(
+        workload=spec.name,
+        arrival=spec.arrival,
+        tier_mix=tier_mix_label(spec.tier_mix),
+        scheduler=scheduler,
+        quality=pool_tier or "",
+        seed=seed,
+        requests=spec.requests,
+        batch_size=batch_size,
+        window_size=window_size,
+        windows=tuple(windows),
+        retirement_order=tuple(retirement_order),
+        slot_reuse=tuple(slot_reuse or ()),
+        ttft_drift_p99=drift,
+        drift_limit=drift_limit,
+        spot_checks=len(sampled),
+        spot_check_failures=failures,
+        violations=tuple(violations),
+    )

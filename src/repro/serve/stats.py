@@ -14,30 +14,75 @@ greedy token streams (what the parity tests bit-compare) and one
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
 from repro.serve.request import RequestStats
 
-__all__ = ["ServeStats", "ServeResult", "percentile", "fmt_ms"]
+__all__ = ["ServeStats", "ServeResult", "SlotAccounting", "percentile", "fmt_ms"]
 
 
-def percentile(values, q: float) -> float:
-    """float percentile of a possibly-empty sequence (0.0 when empty)."""
+def percentile(values, q: float) -> Optional[float]:
+    """float percentile of a sequence, or ``None`` when it is empty.
+
+    ``None`` (not a sentinel 0.0, which reads as "instant") is the
+    empty-distribution answer — callers that render must special-case it
+    the way :func:`fmt_ms` does, and JSON rows carry ``null``.  A single
+    sample is its own percentile at every ``q``.  ``q`` outside [0, 100]
+    is a caller bug and raises here rather than deep inside numpy.
+    """
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100], got {q}")
     vals = list(values)
     if not vals:
-        return 0.0
+        return None
     return float(np.percentile(np.asarray(vals, np.float64), q))
 
 
 def fmt_ms(values, q: float) -> str:
     """``percentile`` rendered as milliseconds — ``"n/a"`` for an empty
-    distribution instead of a misleading ``0ms`` (the empty-input 0.0 of
-    ``percentile`` is a sentinel, not a measurement)."""
-    vals = list(values)
-    if not vals:
+    distribution instead of a misleading ``0ms``."""
+    p = percentile(values, q)
+    if p is None:
         return "n/a"
-    return f"{percentile(vals, q) * 1e3:.0f}ms"
+    return f"{p * 1e3:.0f}ms"
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotAccounting:
+    """Slot-pool conservation ledger of one serve run.
+
+    Counted live inside the scheduler loop (not reconstructed from the
+    retired list), so the soak harness audits what actually happened:
+    every request *seated* into a slot must eventually be *retired* from
+    one (``slot_leaks == 0``), per-slot KV write positions must advance
+    by exactly one physical slot per decode step and stay inside the
+    cache (``position_violations == 0``), and ``slot_reuse`` records how
+    many requests each physical slot hosted — its spread is the
+    fragmentation indicator (one cold slot while others churn means the
+    refill scan is skewing placement).
+    """
+
+    seated: int  # requests seated into a slot (pool prefill + admissions)
+    retired: int  # requests retired out of a slot
+    pool_prefill_seats: int  # seated by the initial batched prefill
+    admission_seats: int  # seated by single-row admission prefills
+    max_live: int  # peak live rows in any decode step
+    slot_reuse: tuple  # per-slot seat counts, length batch_size ('()' for static)
+    position_violations: int  # per-row write-slot monotonicity/bounds failures
+
+    @property
+    def slot_leaks(self) -> int:
+        """Seated-but-never-retired rows after the run drained (must be 0)."""
+        return self.seated - self.retired
+
+    @property
+    def reuse_spread(self) -> int:
+        """max - min per-slot seat count: 0 = perfectly balanced reuse."""
+        if not self.slot_reuse:
+            return 0
+        return int(max(self.slot_reuse) - min(self.slot_reuse))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +134,7 @@ class ServeResult:
     stats: ServeStats
     request_stats: tuple  # of RequestStats, retirement order
     outputs: dict  # request id -> np.ndarray int32 generated tokens
+    accounting: Optional[SlotAccounting] = None  # slot ledger (both loops fill it)
 
     def tokens_for(self, request_id: int) -> np.ndarray:
         return self.outputs[request_id]

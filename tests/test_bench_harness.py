@@ -20,6 +20,7 @@ EXPECTED_SUITES = {
     "accuracy_pareto",
     "gemm_modes",
     "roofline",
+    "serve_soak",
     "serve_throughput",
 }
 

@@ -256,7 +256,7 @@ def test_quality_tier_mismatch_rejected_at_admission(served):
 
 
 def test_empty_distribution_summary_renders_na():
-    """percentile() returns 0.0 on empty input — summary() must say n/a,
+    """percentile() returns None on empty input — summary() must say n/a,
     not a misleading 'ttft p50 0ms', when nothing retired."""
     from repro.serve.stats import ServeStats, fmt_ms
 

@@ -1,0 +1,80 @@
+"""Unit tests for serve-side measurement primitives (repro.serve.stats).
+
+The soak harness leans on ``percentile`` for window audits, so its edge
+cases are pinned directly: an empty distribution is ``None`` (never a
+sentinel 0.0 that reads as "instant"), a single sample is its own
+percentile at every q, and an out-of-range q raises here instead of
+deep inside numpy.  ``SlotAccounting``'s derived counters (leaks, reuse
+spread) are pure arithmetic — pinned so audit semantics cannot drift.
+"""
+
+import pytest
+
+from repro.serve.stats import ServeStats, SlotAccounting, fmt_ms, percentile
+
+
+def test_percentile_empty_is_none():
+    assert percentile((), 50) is None
+    assert percentile([], 99.9) is None
+
+
+def test_percentile_single_sample_is_itself():
+    for q in (0.0, 50.0, 99.0, 99.9, 100.0):
+        assert percentile([0.25], q) == pytest.approx(0.25)
+
+
+def test_percentile_basic_median_and_tails():
+    vals = [1.0, 2.0, 3.0, 4.0, 5.0]
+    assert percentile(vals, 50) == pytest.approx(3.0)
+    assert percentile(vals, 0) == pytest.approx(1.0)
+    assert percentile(vals, 100) == pytest.approx(5.0)
+    # generators are consumed once and still work
+    assert percentile((v for v in vals), 50) == pytest.approx(3.0)
+
+
+def test_percentile_rejects_out_of_range_q():
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        percentile([1.0], -1)
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        percentile([1.0], 100.5)
+    # q validation applies to the empty case too (caller bug either way)
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        percentile([], 200)
+
+
+def test_fmt_ms_consistent_with_percentile():
+    assert fmt_ms((), 50) == "n/a"
+    assert fmt_ms((0.1,), 50) == "100ms"
+    assert fmt_ms((0.1, 0.3), 50) == "200ms"
+
+
+def test_summary_renders_na_on_empty_ttft():
+    empty = ServeStats(
+        requests=0, tokens_out=0, wall_s=0.0, prefill_s=0.0, decode_s=0.0,
+        batch_latencies_s=(), devices=1, scheduler="continuous",
+    )
+    assert "ttft p50 n/a" in empty.summary()
+    assert "0ms" not in empty.summary()
+
+
+def test_slot_accounting_derived_counters():
+    clean = SlotAccounting(
+        seated=12, retired=12, pool_prefill_seats=4, admission_seats=8,
+        max_live=4, slot_reuse=(3, 3, 3, 3), position_violations=0,
+    )
+    assert clean.slot_leaks == 0
+    assert clean.reuse_spread == 0
+
+    leaky = SlotAccounting(
+        seated=12, retired=10, pool_prefill_seats=4, admission_seats=8,
+        max_live=4, slot_reuse=(5, 3, 2, 2), position_violations=1,
+    )
+    assert leaky.slot_leaks == 2
+    assert leaky.reuse_spread == 3
+
+    static = SlotAccounting(
+        seated=7, retired=7, pool_prefill_seats=7, admission_seats=0,
+        max_live=4, slot_reuse=(), position_violations=0,
+    )
+    assert static.slot_leaks == 0
+    assert static.reuse_spread == 0
