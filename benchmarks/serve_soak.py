@@ -40,14 +40,20 @@ SEED = 0
 DRIFT_LIMIT = 50.0  # generous: CPU-host TTFT tails are noisy, leaks are not
 SPOT_CHECKS = 3
 
-# (workload preset, tier mix, pool quality, scheduler)
+# (workload preset, tier mix, pool quality, scheduler, loop, policy)
 CASES = (
-    ("steady", (), None, "continuous"),
-    ("bursty", ((None, 1.0), ("balanced", 3.0)), "balanced", "continuous"),
-    ("flood", (), None, "continuous"),
-    ("churn", (), None, "continuous"),
-    ("steady", (), None, "static"),
+    ("steady", (), None, "continuous", "closed", None),
+    ("bursty", ((None, 1.0), ("balanced", 3.0)), "balanced", "continuous",
+     "closed", None),
+    ("flood", (), None, "continuous", "closed", None),
+    ("churn", (), None, "continuous", "closed", None),
+    ("steady", (), None, "static", "closed", None),
+    # open-loop clocked admission: arrival times drive admissibility and
+    # the SLO-adaptive policy degrades the pool tier under the bursts
+    ("bursty", (), "high", "continuous", "open", "slo-adaptive"),
 )
+OPEN_SLO_TTFT_S = 0.05
+OPEN_STEP_TIME_S = 0.01
 
 
 def rows(reduced: bool = False) -> list:
@@ -61,16 +67,18 @@ def rows(reduced: bool = False) -> list:
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     out = []
-    for workload, tier_mix, quality, scheduler in CASES:
+    for workload, tier_mix, quality, scheduler, loop, policy in CASES:
         spec = preset_spec(
             workload, requests=sizes["requests"], prompt_len=sizes["prompt_len"],
             max_new=sizes["max_new"], vocab_size=cfg.vocab_size, tier_mix=tier_mix,
+            slo_ttft_s=OPEN_SLO_TTFT_S if loop == "open" else None,
         )
         report = run_soak(
             model, params, spec,
             batch_size=sizes["batch_size"], seed=SEED,
             window_size=sizes["window_size"], scheduler=scheduler,
             quality=quality, drift_limit=DRIFT_LIMIT, spot_check=SPOT_CHECKS,
+            loop=loop, policy=policy, step_time_s=OPEN_STEP_TIME_S,
         )
         out.append({"table": "serve_soak", "arch": ARCH,
                     "drift_limit": DRIFT_LIMIT, **report.summary_row()})
@@ -83,8 +91,11 @@ register_suite(Suite(
     description="workload-generator soak: arrival/tier mixes through the "
                 "schedulers with slot-accounting + tail-latency audits",
     key_fields=("table", "arch", "workload", "tier_mix", "scheduler",
-                "requests", "batch_size", "window_size"),
-    higher_is_better=("invariants_ok", "slot_utilization"),
+                "loop", "policy", "requests", "batch_size", "window_size"),
+    # slo_attainment is a virtual-clock quantity on the open-loop rows —
+    # deterministic for a fixed trace, so it gates exactly; it is absent
+    # (non-numeric) on closed-loop rows and skipped there.
+    higher_is_better=("invariants_ok", "slot_utilization", "slo_attainment"),
 ))
 
 

@@ -13,6 +13,15 @@ an identical workload) through both serve loops and reports, per row:
 * ``speedup_vs_static`` (continuous rows) — the retirement win the
   acceptance gate reads.
 
+A second, open-loop section replays one seeded bursty arrival trace
+through the continuous scheduler on its deterministic virtual clock,
+once under ``StaticTier`` with the pool pinned to the ``high`` tier and
+once under ``SLOAdaptive`` (which degrades the pool tier when queue
+depth or rolling TTFT breaches the per-request SLO).  Those rows gate
+``slo_attainment`` and the adaptive-vs-static acceptance ratios — all
+virtual-clock quantities, so they are bit-reproducible for a fixed
+trace.
+
 Both loops warm their jitted steps before the timed region (so the
 numbers measure scheduling, not compilation) and each scheduler is run
 ``REPEATS`` times on the same queue with the fastest run kept —
@@ -43,6 +52,17 @@ REPEATS = 3
 ARCHS = ("qwen3-0.6b",)
 APPROX = (None, "lowrank")  # exact serving + one approximate mode
 
+# ---- open-loop clocked section: StaticTier(high) vs SLOAdaptive on the
+# same seeded bursty trace.  All gated numbers here (slo attainment,
+# queue-delay percentiles, tier switches) are measured on the
+# deterministic *virtual* clock, so they are exactly reproducible for a
+# fixed trace — unlike the wall-clock metrics above.
+OPEN_FULL = {"requests": 64, "batch_size": 4, "prompt_len": 16, "gen": 8}
+OPEN_REDUCED = {"requests": 48, "batch_size": 4, "prompt_len": 8, "gen": 6}
+OPEN_RATE_RPS = 256.0  # offered burst rate the pool cannot sustain at "high"
+OPEN_SLO_TTFT_S = 0.05
+OPEN_STEP_TIME_S = 0.01  # virtual seconds per exact decode step
+
 
 def _p(values, q):
     """Rounded percentile; None (empty distribution) stays None in the row."""
@@ -59,6 +79,8 @@ def _row(arch, mode, cfg_run, result, *, speedup=None) -> dict:
         "arch": arch,
         "approx_mode": mode or "none",
         "scheduler": stats.scheduler,
+        "loop": "open" if stats.open_loop else "closed",
+        "policy": stats.policy or "none",
         "repeats_best_of": REPEATS,
         **cfg_run,
         "requests_served": stats.requests,
@@ -76,9 +98,72 @@ def _row(arch, mode, cfg_run, result, *, speedup=None) -> dict:
         "request_latency_s_p95": _p(stats.request_latencies_s, 95),
         "devices": stats.devices,
     }
+    if stats.open_loop:
+        att = stats.slo_attainment
+        row.update({
+            "queue_delay_s_p50": _p(stats.queue_delay_s, 50),
+            "queue_delay_s_p99": _p(stats.queue_delay_s, 99),
+            "slo_attainment": None if att is None else round(att, 4),
+            "tier_switches": stats.tier_switches,
+            "rejected": stats.rejected,
+            "starved": stats.starved,
+        })
     if speedup is not None:
         row["speedup_vs_static"] = round(speedup, 3)
     return row
+
+
+def _open_loop_rows(arch, cfg, model, params, cfg_run) -> list:
+    """StaticTier(high) vs SLOAdaptive on one seeded bursty trace.
+
+    Both runs replay the identical arrival-stamped workload draw on the
+    deterministic virtual clock against a pool resolved to the ``high``
+    tier.  The adaptive row carries the two acceptance ratios the
+    baseline gates: ``slo_attainment_vs_static`` (must stay > 1: the
+    policy's tier degradation buys strictly more requests inside their
+    TTFT SLO) and ``queue_delay_p99_vs_static`` (static p99 / adaptive
+    p99, must stay >= 1: the win may not come at the cost of a longer
+    queue tail).
+    """
+    from repro.serve import ContinuousScheduler, SLOAdaptive, StaticTier
+    from repro.serve.workload import generate, preset_spec
+
+    spec = preset_spec(
+        "bursty", requests=cfg_run["requests"], prompt_len=cfg_run["prompt_len"],
+        max_new=cfg_run["gen"], vocab_size=cfg.vocab_size,
+        rate_rps=OPEN_RATE_RPS, slo_ttft_s=OPEN_SLO_TTFT_S,
+    )
+    draw = generate(spec, seed=0)
+    out = []
+    results = {}
+    for policy in (
+        StaticTier(),
+        SLOAdaptive(slo_ttft_s=OPEN_SLO_TTFT_S, degrade_after=2,
+                    recover_after=4, min_dwell_ticks=4),
+    ):
+        sched = ContinuousScheduler(
+            model, params,
+            batch_size=cfg_run["batch_size"], prompt_len=cfg_run["prompt_len"],
+            max_new=cfg_run["gen"], quality="high",
+        )
+        results[policy.name] = sched.run(
+            list(draw.requests), arrivals_s=list(draw.arrivals_s),
+            policy=policy, step_time_s=OPEN_STEP_TIME_S, clock="virtual",
+        )
+        row = _row(arch, None, cfg_run, results[policy.name])
+        row["workload"] = "bursty"
+        row["slo_ttft_s"] = OPEN_SLO_TTFT_S
+        out.append(row)
+    st = results["static"].stats
+    ad = results["slo-adaptive"].stats
+    st_p99 = _p(st.queue_delay_s, 99)
+    ad_p99 = _p(ad.queue_delay_s, 99)
+    if st.slo_attainment and ad.slo_attainment is not None:
+        out[-1]["slo_attainment_vs_static"] = round(
+            ad.slo_attainment / st.slo_attainment, 3)
+    if st_p99 and ad_p99:
+        out[-1]["queue_delay_p99_vs_static"] = round(st_p99 / ad_p99, 3)
+    return out
 
 
 def rows(reduced: bool = False) -> list:
@@ -123,6 +208,11 @@ def rows(reduced: bool = False) -> list:
             )
             out.append(_row(arch, mode, cfg_run, static))
             out.append(_row(arch, mode, cfg_run, cont, speedup=speedup))
+            if mode is None:
+                out.extend(_open_loop_rows(
+                    arch, cfg, model, params,
+                    OPEN_REDUCED if reduced else OPEN_FULL,
+                ))
     return out
 
 
@@ -131,14 +221,20 @@ register_suite(Suite(
     rows=rows,
     description="static vs continuous serving: tokens/sec, slot utilization, "
                 "TTFT and per-request latency percentiles",
-    key_fields=("table", "arch", "approx_mode", "scheduler", "batch_size",
-                "prompt_len", "gen"),
+    key_fields=("table", "arch", "approx_mode", "scheduler", "loop", "policy",
+                "batch_size", "prompt_len", "gen"),
     # Gate on metrics that survive shared-runner noise: slot_utilization is
     # deterministic for a fixed queue, and speedup_vs_static is a within-run
     # ratio so host-load noise largely cancels.  Absolute tokens_per_s /
     # latency percentiles swing ~2x run-over-run on loaded CPU hosts — they
     # are recorded for trajectory plots but not gated (docs/benchmarks.md).
-    higher_is_better=("slot_utilization", "speedup_vs_static"),
+    # The open-loop metrics are virtual-clock deterministic for a fixed
+    # trace, so they gate exactly: slo_attainment per policy row, plus the
+    # adaptive row's acceptance ratios (attainment strictly above static,
+    # queue p99 no worse).
+    higher_is_better=("slot_utilization", "speedup_vs_static",
+                      "slo_attainment", "slo_attainment_vs_static",
+                      "queue_delay_p99_vs_static"),
 ))
 
 

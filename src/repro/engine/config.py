@@ -75,6 +75,7 @@ __all__ = [
     "list_tiers",
     "resolve_tier",
     "apply_quality",
+    "tier_cycle_factor",
 ]
 
 
@@ -442,6 +443,39 @@ def resolve_tier(
         tier=spec.name, n=n, order=order, mode=spec.mode,
         backend=spec.backend, per_target=per_target,
     )
+
+
+@functools.lru_cache(maxsize=64)
+def tier_cycle_factor(
+    tier: Optional[str],
+    *,
+    n: int = DEFAULT_N,
+    order: int = 1,
+) -> float:
+    """Relative per-cycle cost of serving at ``tier`` vs the exact design.
+
+    The mean segmented critical path over the tier's resolved per-target
+    splits, normalized by the accurate multiplier's ripple delay — i.e.
+    ``mean(segmented_delay(n, t_target)) / ripple_delay(n)`` with every
+    ``t_target`` chosen by :func:`resolve_tier`'s controller.  ``exact``
+    (or ``None``) is the ripple design itself: factor 1.0.
+
+    This is the gate-delay model's answer to "how much faster is one
+    decode step at this tier", and it is what the serving layer's
+    deterministic virtual clock charges per step (``repro.serve``): a
+    cheaper tier genuinely shortens virtual step time, so SLO-adaptive
+    tier degradation buys real (modeled) throughput.  At n=8 the
+    registered tiers come out monotone: exact 1.0 > high > balanced >
+    draft — pinned by tests.
+    """
+    if tier is None:
+        return 1.0
+    qc = resolve_tier(tier, n=n, order=order)
+    if not qc.per_target:  # exact: approximation disabled
+        return 1.0
+    mean_delay = sum(segmented_delay(q.n, q.t) for q in qc.per_target)
+    mean_delay /= len(qc.per_target)
+    return mean_delay / ripple_delay(n)
 
 
 def apply_quality(

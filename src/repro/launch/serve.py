@@ -11,6 +11,16 @@ the legacy static-batch loop (the measured baseline).
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --batch 4 --gen 32
 
+``--loop open`` switches to arrival-clocked admission: requests are
+drawn from a ``--workload`` preset with real arrival times and only
+become admissible once the (virtual or wall) clock passes them, with a
+pluggable ``--policy`` (static / slo-adaptive / reject) deciding
+admission and the pool's accuracy tier per step:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --loop open --workload bursty --policy slo-adaptive \
+      --slo-ttft-ms 50 --requests 64 --batch 4 --gen 8
+
 ``serve_loop`` and ``ServeStats`` stay importable here for backward
 compatibility; ``serve_loop`` now delegates to
 :func:`repro.serve.static_serve_loop` over a synthesized queue.
@@ -30,11 +40,14 @@ from repro.models.registry import build_model
 from repro.serve import (
     ServeStats,
     continuous_serve_loop,
+    get_policy,
     static_serve_loop,
     supports_continuous,
     synth_requests,
 )
+from repro.serve.policy import POLICIES
 from repro.serve.stats import percentile
+from repro.serve.workload import PRESETS, generate, preset_spec
 
 __all__ = ["ServeStats", "serve_loop", "main"]
 
@@ -97,6 +110,27 @@ def main(argv=None) -> None:
     ap.add_argument("--data-parallel", action="store_true",
                     help="shard the decode batch over a ('data',) device mesh "
                          "when multiple devices are available")
+    ap.add_argument("--loop", default="closed", choices=("closed", "open"),
+                    help="closed: drain a pre-filled queue (the legacy mode); "
+                         "open: arrival-clocked admission — requests become "
+                         "admissible only once their workload arrival time "
+                         "passes (continuous scheduler only)")
+    ap.add_argument("--workload", default="bursty", choices=sorted(PRESETS),
+                    help="open loop: traffic preset supplying the arrival "
+                         "clock and length tails (ignored for --loop closed)")
+    ap.add_argument("--policy", default=None, choices=sorted(POLICIES),
+                    help="admission policy for --loop open: static keeps the "
+                         "bit-match oracle, slo-adaptive degrades the pool "
+                         "tier under load, reject sheds when the queue grows")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="stamp a TTFT SLO (ms) on every open-loop request; "
+                         "enables slo attainment in the summary")
+    ap.add_argument("--step-time-ms", type=float, default=10.0,
+                    help="virtual-clock cost of one exact decode step (open "
+                         "loop; tiers scale it by their cycle factor)")
+    ap.add_argument("--clock", default="virtual", choices=("virtual", "wall"),
+                    help="open loop: deterministic virtual clock (default) or "
+                         "real sleeping wall clock")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -118,22 +152,47 @@ def main(argv=None) -> None:
                   f"(continuous supports attention-only decoder stacks)")
     if args.data_parallel and scheduler != "continuous":
         ap.error("--data-parallel only applies to --scheduler continuous")
+    if args.loop == "open" and scheduler != "continuous":
+        ap.error("--loop open requires --scheduler continuous")
+    if args.policy is not None and args.loop != "open":
+        ap.error("--policy only applies to --loop open (closed-loop "
+                 "admission is the implicit static policy)")
 
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(args.seed))
 
-    queue = synth_requests(
-        args.requests, prompt_len=args.prompt_len, gen=args.gen,
-        vocab_size=cfg.vocab_size, seed=args.seed,
-        vary_budget=args.vary_budget, eos_id=args.eos_id,
-        quality=args.quality_tier,
-    )
+    run_kwargs = {}
+    if args.loop == "open":
+        spec = preset_spec(
+            args.workload, requests=args.requests, prompt_len=args.prompt_len,
+            max_new=args.gen, vocab_size=cfg.vocab_size,
+            slo_ttft_s=args.slo_ttft_ms / 1e3 if args.slo_ttft_ms else None,
+        )
+        draw = generate(spec, seed=args.seed)
+        queue = list(draw.requests)
+        run_kwargs = dict(
+            arrivals_s=list(draw.arrivals_s),
+            policy=get_policy(args.policy or "static"),
+            step_time_s=args.step_time_ms / 1e3,
+            clock=args.clock,
+        )
+        print(f"# open loop: {args.workload} preset, offered "
+              f"{draw.offered_rps:.1f} rps, policy "
+              f"{run_kwargs['policy'].name}")
+    else:
+        queue = synth_requests(
+            args.requests, prompt_len=args.prompt_len, gen=args.gen,
+            vocab_size=cfg.vocab_size, seed=args.seed,
+            vary_budget=args.vary_budget, eos_id=args.eos_id,
+            quality=args.quality_tier,
+        )
     if scheduler == "continuous":
         mesh = data_parallel_mesh(args.batch) if args.data_parallel else None
         result = continuous_serve_loop(
             model, params, queue,
             batch_size=args.batch, prompt_len=args.prompt_len,
             max_new=args.gen, mesh=mesh, quality=args.quality_tier,
+            **run_kwargs,
         )
     else:
         result = static_serve_loop(
@@ -149,6 +208,9 @@ def main(argv=None) -> None:
             f"p95 {1e3 * percentile(lat, 95):.0f}ms over "
             f"{len(lat)} requests"
         )
+    for sw in result.tier_switches:
+        print(f"# tier switch @ step {sw.step} t={sw.now_s:.3f}s: "
+              f"{sw.from_tier} -> {sw.to_tier} ({sw.reason})")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,11 @@ a failed parity spot-check.
 
   # CI runs the ~2k-request version of the same (gating soak-smoke job)
 
+  # open-loop clocked admission with SLO-adaptive tier degradation
+  PYTHONPATH=src python -m repro.launch.soak --arch qwen3-0.6b --reduced \
+      --workload bursty --loop open --policy slo-adaptive --slo-ttft-ms 50 \
+      --requests 256 --batch 4 --window 64
+
 ``--json`` writes the report's summary row plus the per-window audits,
 seed included, so a red run reproduces from the artifact alone.
 """
@@ -31,6 +36,7 @@ import jax
 from repro.configs.registry import get_config
 from repro.engine import config as engine_config
 from repro.models.registry import build_model
+from repro.serve.policy import POLICIES
 from repro.serve.soak import run_soak
 from repro.serve.workload import PRESETS, preset_spec
 
@@ -66,6 +72,22 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scheduler", default="continuous",
                     choices=("continuous", "static"))
+    ap.add_argument("--loop", default="closed", choices=("closed", "open"),
+                    help="closed: each window drains as a pre-filled queue; "
+                         "open: arrival-clocked admission against the "
+                         "window's arrival times (continuous only)")
+    ap.add_argument("--policy", default=None, choices=sorted(POLICIES),
+                    help="admission policy (open loop): static / "
+                         "slo-adaptive / reject; default static")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="stamp a TTFT SLO (ms) on every request so the "
+                         "report carries slo attainment")
+    ap.add_argument("--step-time-ms", type=float, default=10.0,
+                    help="virtual-clock cost of one exact decode step "
+                         "(open loop)")
+    ap.add_argument("--clock", default="virtual", choices=("virtual", "wall"),
+                    help="open loop: deterministic virtual clock (default) "
+                         "or real sleeping wall clock")
     ap.add_argument("--quality-tier", default=None,
                     choices=engine_config.list_tiers(),
                     help="pool accuracy tier; tier-tagged requests are "
@@ -91,6 +113,7 @@ def main(argv=None) -> int:
         args.workload, requests=args.requests, prompt_len=args.prompt_len,
         max_new=args.gen, vocab_size=cfg.vocab_size,
         tier_mix=_parse_tier_mix(args.tier_mix),
+        slo_ttft_s=args.slo_ttft_ms / 1e3 if args.slo_ttft_ms else None,
     )
 
     def progress(w):
@@ -105,6 +128,8 @@ def main(argv=None) -> int:
         scheduler=args.scheduler, quality=args.quality_tier,
         drift_limit=args.drift_limit if args.drift_limit > 0 else None,
         spot_check=args.spot_check, progress=progress,
+        loop=args.loop, policy=args.policy,
+        step_time_s=args.step_time_ms / 1e3, clock=args.clock,
     )
 
     print(report.describe())

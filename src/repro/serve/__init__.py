@@ -11,6 +11,9 @@ Public surface:
   and parity oracle.
 * :class:`~repro.serve.stats.ServeStats` / ``ServeResult`` /
   ``SlotAccounting`` — what a run measures and returns.
+* :class:`~repro.serve.policy.AdmissionPolicy` and its implementations
+  (``StaticTier`` / ``SLOAdaptive`` / ``Reject``) — pluggable admission
+  + accuracy-tier control for the open-loop clocked scheduler.
 * :class:`~repro.serve.workload.WorkloadSpec` / ``preset_spec`` —
   traffic-realistic workload generation (arrival processes, long-tail
   lengths, tier mixes, abuse presets).
@@ -18,6 +21,15 @@ Public surface:
   soak harness auditing slot-accounting and tail-latency invariants.
 """
 
+from repro.serve.policy import (
+    AdmissionPolicy,
+    LoadSnapshot,
+    Reject,
+    SLOAdaptive,
+    StaticTier,
+    TierSwitch,
+    get_policy,
+)
 from repro.serve.request import Request, RequestStats, synth_requests
 from repro.serve.scheduler import (
     ContinuousScheduler,
@@ -25,7 +37,7 @@ from repro.serve.scheduler import (
     static_serve_loop,
     supports_continuous,
 )
-from repro.serve.soak import SoakReport, run_soak
+from repro.serve.soak import SoakReport, probe_eos_id, run_soak
 from repro.serve.stats import ServeResult, ServeStats, SlotAccounting
 from repro.serve.workload import Workload, WorkloadSpec, preset_spec
 
@@ -37,6 +49,13 @@ __all__ = [
     "continuous_serve_loop",
     "static_serve_loop",
     "supports_continuous",
+    "AdmissionPolicy",
+    "LoadSnapshot",
+    "TierSwitch",
+    "StaticTier",
+    "SLOAdaptive",
+    "Reject",
+    "get_policy",
     "ServeResult",
     "ServeStats",
     "SlotAccounting",
@@ -44,5 +63,6 @@ __all__ = [
     "WorkloadSpec",
     "preset_spec",
     "SoakReport",
+    "probe_eos_id",
     "run_soak",
 ]

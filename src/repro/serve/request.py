@@ -31,17 +31,30 @@ class Request:
     max_new: int  # generation budget (>= 1)
     eos_id: Optional[int] = None  # retire early on this token, if set
     # accuracy tier the request was sold at (a repro.engine.config tier
-    # name).  None = whatever the pool runs.  The scheduler checks the
-    # tier against its own resolved engine config at admission — one
-    # pool serves one tier, mismatches are rejected rather than served
-    # at silently different quality.
+    # name).  None = whatever the pool runs.  Tier-enforcing admission
+    # policies check the tier against the pool's resolved engine config
+    # at admission — one pool serves one tier, mismatches are rejected
+    # rather than served at silently different quality.  Under an
+    # SLO-adaptive policy the tag is instead the *preferred* tier: the
+    # pool may serve the request cheaper under pressure, and the tier
+    # actually used is recorded in ``RequestStats.tier_served``.
     quality: Optional[str] = None
+    # per-request TTFT service-level objective, in seconds.  None = no
+    # SLO.  The open-loop scheduler scores attainment (first token
+    # within the SLO, measured from *arrival*) over every offered
+    # request carrying one — rejected requests count as missed, so a
+    # load-shedding policy cannot game the metric.
+    slo_ttft_s: Optional[float] = None
 
     def __post_init__(self):
         if len(self.tokens) < 1:
             raise ValueError(f"request {self.id}: empty prompt")
         if self.max_new < 1:
             raise ValueError(f"request {self.id}: max_new must be >= 1, got {self.max_new}")
+        if self.slo_ttft_s is not None and self.slo_ttft_s <= 0:
+            raise ValueError(
+                f"request {self.id}: slo_ttft_s must be > 0, got {self.slo_ttft_s}"
+            )
 
     @property
     def prompt_len(self) -> int:
@@ -50,7 +63,14 @@ class Request:
 
 @dataclasses.dataclass(frozen=True)
 class RequestStats:
-    """Per-request serving record (wall times in seconds from run start)."""
+    """Per-request serving record.
+
+    Closed loop: times are seconds from run start (the legacy
+    semantics, unchanged).  Open loop: ``ttft_s`` and ``latency_s`` are
+    re-based to the request's *arrival* time — what the client
+    experiences, queueing included — and ``queue_delay_s`` separates the
+    waiting component out (``ttft_s = queue_delay_s + admission cost``).
+    """
 
     id: int
     prompt_len: int
@@ -58,7 +78,11 @@ class RequestStats:
     admit_step: int  # global decode step at admission (0 == initial fill)
     ttft_s: float  # time to first token (queue wait + admission prefill)
     latency_s: float  # time to retirement
-    finish_reason: str  # "budget" | "eos"
+    finish_reason: str  # "budget" | "eos" | "rejected"
+    arrival_s: float = 0.0  # open loop: arrival time on the run clock
+    queue_delay_s: Optional[float] = None  # open loop: admission - arrival
+    tier_served: str = ""  # accuracy tier actually served ("" = pool config)
+    slo_ttft_s: Optional[float] = None  # the request's TTFT SLO, if any
 
 
 def synth_requests(

@@ -26,6 +26,15 @@ The continuous part is the slot lifecycle:
 the measured baseline and the parity oracle (it is exactly the old
 ``launch.serve`` behavior, request-list interface aside).
 
+:meth:`ContinuousScheduler.run` drives the slot pool in either of two
+loop modes.  *Closed loop* (the default) drains the queue as fast as
+slots free — the historical behavior, bit for bit.  *Open loop*
+(``arrivals_s=...``) gates admission on each request's arrival clock
+and consults a pluggable :mod:`repro.serve.policy` admission policy per
+tick, so queueing delay, burst backpressure, load shedding, and
+SLO-adaptive accuracy-tier switching become first-class, measurable
+behaviors (docs/serving.md §Admission policies).
+
 Scope: decoder-only families.  Per-row position masking is exact for
 attention caches; recurrent-state families (RG-LRU / SSD) integrate left
 pads into their state, so admitting a padded prompt for them is rejected
@@ -46,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.policy import AdmissionPolicy, LoadSnapshot, StaticTier, get_policy
 from repro.serve.request import Request, RequestStats
 from repro.serve.stats import ServeResult, ServeStats, SlotAccounting
 from repro.train.steps import make_decode_step, make_prefill_step
@@ -144,23 +154,49 @@ class _Slot:
     req: Request
     tokens: list  # generated token ids (first from admission prefill)
     admit_step: int
-    t_first: float  # perf_counter at first token
+    t_first: float  # clock at first token (perf_counter closed loop)
     t_done: float = 0.0
     done: bool = False
     finish_reason: str = ""
+    arrival_s: float = 0.0  # open loop: arrival time on the run clock
+    queue_delay_s: Optional[float] = None  # open loop: admission - arrival
+    tier_served: str = ""  # accuracy tier at admission ("" = pool config)
 
     @property
     def emitted(self) -> int:
         return len(self.tokens)
 
-    def absorb(self, tok: int) -> None:
+    def absorb(self, tok: int, now: Optional[float] = None) -> None:
+        """Take one token; ``now`` stamps completion on the open-loop
+        clock (closed loop keeps the legacy perf_counter stamp)."""
         self.tokens.append(tok)
         if self.req.eos_id is not None and tok == self.req.eos_id:
             self.done, self.finish_reason = True, "eos"
         elif self.emitted >= self.req.max_new:
             self.done, self.finish_reason = True, "budget"
         if self.done:
-            self.t_done = time.perf_counter()
+            self.t_done = time.perf_counter() if now is None else now
+
+
+@dataclasses.dataclass(frozen=True)
+class _TierEngine:
+    """One accuracy tier's jitted serving steps over the shared slot pool.
+
+    Approximation only changes the forward math — KV cache shapes and
+    dtypes are tier-independent — so every engine reads and writes the
+    *same* physical pool cache, and switching the serving tier mid-run
+    is a dict lookup plus (first visit) a jit compile.  This is the
+    serving-layer analogue of reconfiguring an accuracy-configurable
+    multiplier's splitting point in place: same hardware (weights +
+    cache), different carry-chain cut, near-zero switching cost.
+    """
+
+    key: Optional[str]  # engine-cache key (canonical tier, None = pool base)
+    name: Optional[str]  # canonical tier name (None = no tier applied)
+    admit_step: object  # jitted single-row prefill + scatter + argmax
+    prefill_pool: object  # jitted batched pool prefill
+    decode: object  # jitted pool decode with fused greedy argmax
+    cost_factor: float  # tier_cycle_factor: virtual clock cost per step
 
 
 class ContinuousScheduler:
@@ -204,6 +240,18 @@ class ContinuousScheduler:
         self.capacity = prompt_len + max_new
         self.mesh = mesh
         self._cache_dtype = jnp.dtype(model.cfg.dtype)
+        self._engines: dict = {}
+        self._base_engine = self._build_engine(model, self.quality, self.quality)
+        self._engines[self.quality] = self._base_engine
+        # the pool tier's steps under their historical names — warmup and
+        # external callers target the base engine
+        self._admit_step = self._base_engine.admit_step
+        self._prefill_pool = self._base_engine.prefill_pool
+        self._decode = self._base_engine.decode
+
+    # ------------------------------------------------------------- engines
+    def _build_engine(self, model, name, key) -> _TierEngine:
+        """Jit the (admit, pool-prefill, decode) triple for one tier."""
         prefill = make_prefill_step(model, self.capacity)
         decode = make_decode_step(model)
 
@@ -227,9 +275,30 @@ class ContinuousScheduler:
             logits, caches = decode(params, caches, tok, pos, write)
             return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), caches
 
-        self._admit_step = jax.jit(admit_step, donate_argnums=1)
-        self._prefill_pool = jax.jit(prefill_pool)
-        self._decode = jax.jit(decode_greedy, donate_argnums=1)
+        from repro.engine.config import tier_cycle_factor
+
+        return _TierEngine(
+            key=key,
+            name=name,
+            admit_step=jax.jit(admit_step, donate_argnums=1),
+            prefill_pool=jax.jit(prefill_pool),
+            decode=jax.jit(decode_greedy, donate_argnums=1),
+            cost_factor=tier_cycle_factor(name),
+        )
+
+    def _engine_for(self, tier) -> _TierEngine:
+        """The engine serving ``tier`` (None = the pool's base config),
+        built and jitted on first visit, cached for the scheduler's
+        lifetime.  Safe to apply to the already-tier-resolved pool model:
+        ``engine.config.apply_quality`` replaces the approx config
+        wholesale, so re-tiering is not cumulative."""
+        key = tier if tier is not None else self.quality
+        eng = self._engines.get(key)
+        if eng is None:
+            model, name = _apply_pool_quality(self.model, key)
+            eng = self._build_engine(model, name, key)
+            self._engines[key] = eng
+        return eng
 
     # ------------------------------------------------------------- helpers
     def _mesh_ctx(self):
@@ -240,8 +309,11 @@ class ContinuousScheduler:
         return mesh_context(self.mesh)
 
     def _pad(self, req: Request) -> tuple:
-        """Left-pad one prompt into the bucket; true position ids for pads < 0."""
-        _check_request_quality(req, self.quality)
+        """Left-pad one prompt into the bucket; true position ids for pads < 0.
+
+        Tier-tag enforcement moved to the admission paths in :meth:`run`
+        (it is policy-dependent now: an SLO-adaptive policy treats the
+        tag as a preference, not a contract)."""
         ln = req.prompt_len
         if ln > self.prompt_len:
             raise ValueError(
@@ -263,10 +335,11 @@ class ContinuousScheduler:
         pos = np.arange(self.prompt_len, dtype=np.int32) - (self.prompt_len - ln)
         return toks, pos
 
-    def _prefill_row(self, req: Request, caches: dict, row: int):
+    def _prefill_row(self, req: Request, caches: dict, row: int, engine=None):
         """Fused admission: single-row prefill + scatter; returns (caches, tok0)."""
+        eng = engine if engine is not None else self._base_engine
         toks, pos = self._pad(req)
-        caches, tok0 = self._admit_step(
+        caches, tok0 = eng.admit_step(
             self.params, caches, jnp.asarray(toks[None]), jnp.asarray(pos[None]),
             jnp.int32(row),
         )
@@ -291,14 +364,82 @@ class ContinuousScheduler:
             jax.block_until_ready(nxt)
 
     # ----------------------------------------------------------------- run
-    def run(self, requests: Sequence[Request], *, warmup: bool = True) -> ServeResult:
-        """Serve ``requests`` to completion; returns stats + token streams."""
+    def run(
+        self,
+        requests: Sequence[Request],
+        *,
+        warmup: bool = True,
+        arrivals_s: Optional[Sequence[float]] = None,
+        policy=None,
+        step_time_s: float = 0.01,
+        clock: str = "virtual",
+    ) -> ServeResult:
+        """Serve ``requests`` to completion; returns stats + token streams.
+
+        **Closed loop** (default, ``arrivals_s=None``): the queue is
+        drained as fast as slots free up — the pre-policy behavior, bit
+        for bit (the implicit :class:`~repro.serve.policy.StaticTier`
+        admits everything at the pool's tier through the same jitted
+        steps, and all timing keeps the legacy run-start semantics).
+
+        **Open loop** (``arrivals_s`` given — one non-decreasing arrival
+        time per request, seconds from run start): a request becomes
+        admissible only once the clock passes its arrival time, so
+        queueing delay and burst backpressure are *measured* instead of
+        assumed away.  Per-request ``ttft_s``/``latency_s`` are re-based
+        to arrival, and ``queue_delay_s`` separates out the waiting
+        component.  ``clock`` selects the timebase:
+
+        * ``"virtual"`` (default) — deterministic modeled time: every
+          admission prefill and pool decode step advances the clock by
+          ``step_time_s`` scaled by the serving tier's
+          :func:`repro.engine.config.tier_cycle_factor` (the paper's
+          gate-delay model: cheaper tiers take genuinely shorter
+          virtual steps, exact = 1.0).  Identical traces replay
+          identical timings, so queue delays, SLO attainment, and
+          tier-switch sequences are reproducible and CI-gateable.
+        * ``"wall"`` — real time; idle gaps are slept through.
+
+        ``policy`` is an :class:`~repro.serve.policy.AdmissionPolicy`
+        instance or registry name (``"static"``/``"slo-adaptive"``/
+        ``"reject"``).  Once per scheduler tick the policy picks the
+        serving tier — admissions *and* decode run at it, pool-wide,
+        the software analogue of reconfiguring the multipliers'
+        splitting point in place — and per queued request it decides
+        admit vs shed.  Tier switches reuse the one KV cache
+        (approximation never changes cache shapes); each newly visited
+        tier jits its step functions on first use.
+        """
+        open_loop = arrivals_s is not None
+        pol = get_policy(policy) if policy is not None else StaticTier()
+        if open_loop:
+            arrivals = [float(a) for a in arrivals_s]
+            if len(arrivals) != len(requests):
+                raise ValueError(
+                    f"arrivals_s has {len(arrivals)} entries for "
+                    f"{len(requests)} requests"
+                )
+            if any(b < a for a, b in zip(arrivals, arrivals[1:])):
+                raise ValueError("arrivals_s must be non-decreasing")
+            if step_time_s <= 0:
+                raise ValueError(f"step_time_s must be > 0, got {step_time_s}")
+            if clock not in ("virtual", "wall"):
+                raise ValueError(
+                    f"clock must be 'virtual' or 'wall', got {clock!r}"
+                )
         if warmup:
             self.warmup()
         B, P = self.batch_size, self.prompt_len
-        queue = collections.deque(requests)
+        pending: collections.deque = collections.deque(
+            zip(requests, arrivals) if open_loop else ()
+        )
+        queue: collections.deque = collections.deque(
+            () if open_loop else requests
+        )
+        arrived_at: dict = {}  # id -> arrival time, while queued (open loop)
         slots: list[Optional[_Slot]] = [None] * B
         retired: list[RequestStats] = []
+        rejected: list[RequestStats] = []
         outputs: dict = {}
         cur_tok = np.zeros((B, 1), np.int32)
         prefill_s = decode_s = 0.0
@@ -314,25 +455,89 @@ class ContinuousScheduler:
         seat_counts = [0] * B
         last_write = [0] * B  # per-slot last physical KV write index
         position_violations = 0
+        engine = self._base_engine
+        pol.begin(self.quality)
+        now = 0.0  # open-loop clock (virtual seconds, or wall since t0)
 
         t0 = time.perf_counter()
 
+        def pump() -> None:
+            # open loop: requests whose arrival time has passed move from
+            # the pending stream into the admissible queue
+            while pending and pending[0][1] <= now + 1e-12:
+                req, arr = pending.popleft()
+                arrived_at[req.id] = arr
+                queue.append(req)
+
+        def snapshot() -> LoadSnapshot:
+            head_wait = 0.0
+            if open_loop and queue:
+                head_wait = now - arrived_at[queue[0].id]
+            return LoadSnapshot(
+                now_s=now if open_loop else time.perf_counter() - t0,
+                step=step,
+                queue_depth=len(queue),
+                pending=len(pending),
+                live_rows=sum(1 for s in slots if s is not None),
+                batch_size=B,
+                head_wait_s=head_wait,
+            )
+
         def retire(i: int) -> None:
             s = slots[i]
-            retired.append(RequestStats(
-                id=s.req.id,
-                prompt_len=s.req.prompt_len,
-                tokens_out=s.emitted,
-                admit_step=s.admit_step,
-                ttft_s=s.t_first - t0,
-                latency_s=(s.t_done or time.perf_counter()) - t0,
-                finish_reason=s.finish_reason,
-            ))
+            if open_loop:
+                rs = RequestStats(
+                    id=s.req.id,
+                    prompt_len=s.req.prompt_len,
+                    tokens_out=s.emitted,
+                    admit_step=s.admit_step,
+                    # what the client experiences: both re-based to arrival
+                    ttft_s=s.t_first - s.arrival_s,
+                    latency_s=(s.t_done if s.done else now) - s.arrival_s,
+                    finish_reason=s.finish_reason,
+                    arrival_s=s.arrival_s,
+                    queue_delay_s=s.queue_delay_s,
+                    tier_served=s.tier_served,
+                    slo_ttft_s=s.req.slo_ttft_s,
+                )
+            else:
+                rs = RequestStats(
+                    id=s.req.id,
+                    prompt_len=s.req.prompt_len,
+                    tokens_out=s.emitted,
+                    admit_step=s.admit_step,
+                    ttft_s=s.t_first - t0,
+                    latency_s=(s.t_done or time.perf_counter()) - t0,
+                    finish_reason=s.finish_reason,
+                    tier_served=s.tier_served,
+                    slo_ttft_s=s.req.slo_ttft_s,
+                )
+            retired.append(rs)
             outputs[s.req.id] = np.asarray(s.tokens, np.int32)
             slots[i] = None
+            pol.observe(rs)
+
+        def reject(req: Request) -> None:
+            if open_loop:
+                arr = arrived_at.pop(req.id)
+                rs = RequestStats(
+                    id=req.id, prompt_len=req.prompt_len, tokens_out=0,
+                    admit_step=step, ttft_s=0.0, latency_s=now - arr,
+                    finish_reason="rejected", arrival_s=arr,
+                    queue_delay_s=now - arr, slo_ttft_s=req.slo_ttft_s,
+                )
+            else:
+                rs = RequestStats(
+                    id=req.id, prompt_len=req.prompt_len, tokens_out=0,
+                    admit_step=step, ttft_s=0.0,
+                    latency_s=time.perf_counter() - t0,
+                    finish_reason="rejected", slo_ttft_s=req.slo_ttft_s,
+                )
+            rejected.append(rs)
 
         def seat(i: int, req: Request, tok0: int, t_first: float,
-                 *, pool: bool = False) -> None:
+                 *, pool: bool = False, arrival: float = 0.0,
+                 queue_delay: Optional[float] = None) -> None:
             nonlocal seated_total, pool_seats, admission_seats
             seated_total += 1
             seat_counts[i] += 1
@@ -343,18 +548,34 @@ class ContinuousScheduler:
             # admission prefill wrote cache indices [0, P); the row's first
             # decode write lands at exactly P
             last_write[i] = P - 1
-            slot = _Slot(req=req, tokens=[], admit_step=step, t_first=t_first)
-            slot.absorb(tok0)
+            slot = _Slot(req=req, tokens=[], admit_step=step, t_first=t_first,
+                         arrival_s=arrival, queue_delay_s=queue_delay,
+                         tier_served=engine.name or "")
+            slot.absorb(tok0, now=t_first if open_loop else None)
             cur_tok[i, 0] = tok0
             slots[i] = slot
             if slot.done:  # budget 1 / instant EOS: free the slot again
                 retire(i)
 
         with self._mesh_ctx():
-            if len(queue) >= B:
+            if open_loop:
+                if clock == "wall":
+                    now = time.perf_counter() - t0
+                pump()
+            if (
+                not open_loop
+                and len(queue) >= B
+                # only when the policy cannot shed (admit is the base
+                # always-True implementation) — a shedding policy must see
+                # every request through the per-request admission path
+                and type(pol).admit is AdmissionPolicy.admit
+            ):
                 # initial fill: the batched prefill of all B slots *is* the
                 # pool cache — one dispatch, no scatters
                 first = [queue.popleft() for _ in range(B)]
+                if pol.enforces_tier_tags:
+                    for r in first:
+                        _check_request_quality(r, self.quality)
                 padded = [self._pad(r) for r in first]
                 toks = jnp.asarray(np.stack([t for t, _ in padded]))
                 pos = jnp.asarray(np.stack([p for _, p in padded]))
@@ -367,20 +588,61 @@ class ContinuousScheduler:
             else:
                 caches = self.model.init_caches(B, self.capacity, self._cache_dtype)
             while True:
+                if open_loop:
+                    if clock == "wall":
+                        now = time.perf_counter() - t0
+                    pump()
+                # one control tick: the policy picks this tick's serving
+                # tier; admissions and decode below both run at it
+                want = pol.tier(snapshot())
+                want = want if want is not None else self.quality
+                if want != engine.key:
+                    engine = self._engine_for(want)
                 # retire finished rows, refill freed slots from the queue
                 for i in range(B):
                     if slots[i] is not None and slots[i].done:
                         retire(i)
                     while slots[i] is None and queue:
-                        req = queue.popleft()
+                        req = queue[0]
+                        if not pol.admit(req, snapshot()):
+                            queue.popleft()
+                            reject(req)
+                            continue
+                        queue.popleft()
+                        if pol.enforces_tier_tags:
+                            _check_request_quality(req, self.quality)
                         t_a = time.perf_counter()
-                        caches, tok0 = self._prefill_row(req, caches, i)
+                        caches, tok0 = self._prefill_row(req, caches, i, engine)
                         t_b = time.perf_counter()
                         prefill_s += t_b - t_a
-                        seat(i, req, tok0, t_b)
+                        if open_loop:
+                            arr = arrived_at.pop(req.id)
+                            qd = now - arr
+                            now = (
+                                now + step_time_s * engine.cost_factor
+                                if clock == "virtual"
+                                else time.perf_counter() - t0
+                            )
+                            seat(i, req, tok0, now, arrival=arr, queue_delay=qd)
+                            pump()  # admission took time: new arrivals?
+                        else:
+                            seat(i, req, tok0, t_b)
 
                 live = [i for i in range(B) if slots[i] is not None]
                 if not live:
+                    if open_loop and pending:
+                        # idle gap: nothing decoding, nothing admissible —
+                        # jump (or sleep) the clock to the next arrival
+                        nxt_arrival = pending[0][1]
+                        if clock == "virtual":
+                            now = max(now, nxt_arrival)
+                        else:
+                            wait = nxt_arrival - (time.perf_counter() - t0)
+                            if wait > 0:
+                                time.sleep(wait)
+                            now = time.perf_counter() - t0
+                        pump()
+                        continue
                     break
                 max_live = max(max_live, len(live))
 
@@ -406,7 +668,7 @@ class ContinuousScheduler:
                     else:  # dead lane: park at the last slot, offset 0
                         pos[i] = write[i] = self.capacity - 1
                 t_d = time.perf_counter()
-                nxt, caches = self._decode(
+                nxt, caches = engine.decode(
                     self.params, caches, jnp.asarray(cur_tok),
                     jnp.asarray(pos), jnp.asarray(write),
                 )
@@ -414,11 +676,30 @@ class ContinuousScheduler:
                 decode_s += time.perf_counter() - t_d
                 step += 1
                 busy_row_steps += len(live)
+                if open_loop:
+                    now = (
+                        now + step_time_s * engine.cost_factor
+                        if clock == "virtual"
+                        else time.perf_counter() - t0
+                    )
                 for i in live:
-                    slots[i].absorb(int(nxt[i]))
+                    slots[i].absorb(int(nxt[i]), now=now if open_loop else None)
                     cur_tok[i, 0] = nxt[i]
+                if open_loop:
+                    pump()
 
         wall = time.perf_counter() - t0
+        # SLO attainment over every *offered* request carrying an SLO:
+        # rejected (and any starved) requests count as missed, so a
+        # shedding policy cannot game the metric by refusing work
+        slo_total = sum(
+            1 for r in requests if r.slo_ttft_s is not None
+        )
+        slo_attained = sum(
+            1 for r in retired
+            if r.slo_ttft_s is not None and r.ttft_s <= r.slo_ttft_s
+        )
+        switches = pol.switches
         stats = ServeStats(
             requests=len(retired),
             tokens_out=sum(r.tokens_out for r in retired),
@@ -433,6 +714,17 @@ class ContinuousScheduler:
             ttft_s=tuple(r.ttft_s for r in retired),
             request_latencies_s=tuple(r.latency_s for r in retired),
             quality=self.quality or "",
+            open_loop=open_loop,
+            policy=pol.name,
+            queue_delay_s=tuple(
+                r.queue_delay_s for r in retired
+                if r.queue_delay_s is not None
+            ),
+            tier_switches=len(switches),
+            rejected=len(rejected),
+            starved=len(requests) - len(retired) - len(rejected),
+            slo_total=slo_total,
+            slo_attained=slo_attained,
         )
         accounting = SlotAccounting(
             seated=seated_total,
@@ -444,21 +736,26 @@ class ContinuousScheduler:
             position_violations=position_violations,
         )
         return ServeResult(stats=stats, request_stats=tuple(retired),
-                           outputs=outputs, accounting=accounting)
+                           outputs=outputs, accounting=accounting,
+                           tier_switches=switches, rejected=tuple(rejected))
 
 
 def continuous_serve_loop(
     model, params, requests: Sequence[Request], *,
     batch_size: int, prompt_len: int, max_new: int,
-    mesh=None, warmup: bool = True, quality=None,
+    mesh=None, warmup: bool = True, quality=None, **run_kwargs,
 ) -> ServeResult:
-    """One-shot convenience wrapper over :class:`ContinuousScheduler`."""
+    """One-shot convenience wrapper over :class:`ContinuousScheduler`.
+
+    ``run_kwargs`` pass through to :meth:`ContinuousScheduler.run`
+    (``arrivals_s`` / ``policy`` / ``step_time_s`` / ``clock`` for
+    open-loop clocked admission)."""
     sched = ContinuousScheduler(
         model, params,
         batch_size=batch_size, prompt_len=prompt_len, max_new=max_new, mesh=mesh,
         quality=quality,
     )
-    return sched.run(requests, warmup=warmup)
+    return sched.run(requests, warmup=warmup, **run_kwargs)
 
 
 # -------------------------------------------------------------------- static

@@ -41,15 +41,48 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.serve.policy import AdmissionPolicy, StaticTier, get_policy
 from repro.serve.scheduler import (
     ContinuousScheduler,
     _apply_pool_quality,
     static_serve_loop,
 )
 from repro.serve.stats import percentile
-from repro.serve.workload import WorkloadSpec, iter_windows, tier_mix_label
+from repro.serve.workload import WorkloadSpec, iter_requests, iter_windows, tier_mix_label
 
-__all__ = ["WindowAudit", "SoakReport", "run_soak"]
+__all__ = ["WindowAudit", "SoakReport", "probe_eos_id", "run_soak"]
+
+
+def probe_eos_id(
+    model, params, spec: WorkloadSpec, *, seed: int = 0, probes: int = 5,
+    quality=None,
+) -> int:
+    """The pool's *modal greedy first token* over a few probe prompts.
+
+    EOS emission depends on model weights, so a workload cannot hardcode
+    an ``eos_id`` that actually fires; probing the modal first token
+    gives the trace an EOS the pool genuinely emits — the ``churn``
+    preset uses it (``WorkloadSpec.eos_probe``) to turn budget-capped
+    retirement into true instant-EOS retirement.  The probe draws its
+    prompts from a decorrelated seed (so the soak trace itself is
+    untouched) and serves each alone, unpadded, at the pool's tier;
+    ties break toward the smallest token id for determinism.
+    """
+    if probes < 1:
+        raise ValueError(f"probes must be >= 1, got {probes}")
+    probe_spec = dataclasses.replace(
+        spec, requests=probes, eos_id=None, eos_probe=False, tier_mix=(),
+    )
+    counts: dict[int, int] = {}
+    for req, _ in iter_requests(probe_spec, seed + 7919):
+        one = dataclasses.replace(req, max_new=1, eos_id=None, quality=None)
+        alone = static_serve_loop(
+            model, params, [one], batch_size=1, prompt_len=one.prompt_len,
+            gen=1, warmup=False, quality=quality,
+        )
+        tok = int(alone.outputs[one.id][0])
+        counts[tok] = counts.get(tok, 0) + 1
+    return max(sorted(counts), key=lambda t: counts[t])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +107,12 @@ class WindowAudit:
     ttft_p99_s: Optional[float]
     ttft_p999_s: Optional[float]
     violations: tuple  # of str; empty == clean window
+    rejected: int = 0  # requests the admission policy shed this window
+    eos_retired: int = 0  # rows retired by EOS emission (vs budget)
+    queue_delay_p99_s: Optional[float] = None  # open loop only
+    tier_switches: int = 0  # pool tier transitions this window
+    slo_total: int = 0
+    slo_attained: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,10 +136,31 @@ class SoakReport:
     spot_checks: int
     spot_check_failures: int
     violations: tuple  # of str, aggregated over windows + run-level checks
+    loop: str = "closed"  # "closed" (queue drain) | "open" (arrival clocks)
+    policy: str = ""  # admission policy name ("" = implicit static)
 
     @property
     def ok(self) -> bool:
         return not self.violations
+
+    @property
+    def rejected(self) -> int:
+        return sum(w.rejected for w in self.windows)
+
+    @property
+    def eos_retired(self) -> int:
+        return sum(w.eos_retired for w in self.windows)
+
+    @property
+    def tier_switches(self) -> int:
+        return sum(w.tier_switches for w in self.windows)
+
+    @property
+    def slo_attainment(self) -> Optional[float]:
+        total = sum(w.slo_total for w in self.windows)
+        if total == 0:
+            return None
+        return sum(w.slo_attained for w in self.windows) / total
 
     @property
     def tokens_out(self) -> int:
@@ -137,12 +197,17 @@ class SoakReport:
                          if w.ttft_p99_s is not None), default=None)
         worst_p999 = max((w.ttft_p999_s for w in self.windows
                           if w.ttft_p999_s is not None), default=None)
+        worst_queue_p99 = max((w.queue_delay_p99_s for w in self.windows
+                               if w.queue_delay_p99_s is not None), default=None)
+        att = self.slo_attainment
         return {
             "workload": self.workload,
             "arrival": self.arrival,
             "tier_mix": self.tier_mix,
             "scheduler": self.scheduler,
             "quality": self.quality,
+            "loop": self.loop,
+            "policy": self.policy or "static",
             "seed": self.seed,
             "requests": self.requests,
             "batch_size": self.batch_size,
@@ -165,6 +230,13 @@ class SoakReport:
             "ttft_p99_s_worst": None if worst_p99 is None else round(worst_p99, 4),
             "ttft_p999_s_worst": None if worst_p999 is None else round(worst_p999, 4),
             "ttft_drift_p99": round(self.ttft_drift_p99, 3),
+            "rejected": self.rejected,
+            "eos_retired": self.eos_retired,
+            "tier_switches": self.tier_switches,
+            "queue_delay_p99_s_worst": (
+                None if worst_queue_p99 is None else round(worst_queue_p99, 4)
+            ),
+            "slo_attainment": None if att is None else round(att, 4),
             "spot_checks": self.spot_checks,
             "spot_check_failures": self.spot_check_failures,
             "violation_count": len(self.violations),
@@ -184,20 +256,32 @@ class SoakReport:
 
 
 def _audit_window(k, window_reqs, times, result, served_ids) -> WindowAudit:
-    """Cross-check one window's ServeResult against what was offered."""
+    """Cross-check one window's ServeResult against what was offered.
+
+    An admission policy may legitimately *shed* requests: a rejected id
+    counts as handled exactly once (it must not read as lost, must not
+    be served too, and still participates in cross-window duplicate
+    detection), and ``served + rejected`` must cover the whole window —
+    anything else is starvation, which is always a violation.
+    """
     stats, acct = result.stats, result.accounting
     by_id = {r.id: r for r in window_reqs}
     out_ids = set(result.outputs)
-    lost = sorted(set(by_id) - out_ids)
-    alien = sorted(out_ids - set(by_id))
-    dup = sorted(out_ids & served_ids)
-    served_ids |= out_ids
+    rej_ids = {rs.id for rs in result.rejected}
+    handled = out_ids | rej_ids
+    lost = sorted(set(by_id) - handled)
+    alien = sorted(handled - set(by_id))
+    dup = sorted((out_ids & rej_ids) | (handled & served_ids))
+    served_ids |= handled
 
     violations = []
-    if stats.requests != len(window_reqs):
+    if stats.requests + stats.rejected != len(window_reqs):
         violations.append(
-            f"window {k}: served {stats.requests} of {len(window_reqs)} requests"
+            f"window {k}: served {stats.requests} + rejected {stats.rejected} "
+            f"of {len(window_reqs)} requests"
         )
+    if stats.starved != 0:
+        violations.append(f"window {k}: {stats.starved} starved requests")
     if lost:
         violations.append(f"window {k}: lost requests {lost[:8]}")
     if alien:
@@ -241,6 +325,14 @@ def _audit_window(k, window_reqs, times, result, served_ids) -> WindowAudit:
         ttft_p99_s=percentile(stats.ttft_s, 99),
         ttft_p999_s=percentile(stats.ttft_s, 99.9),
         violations=tuple(violations),
+        rejected=stats.rejected,
+        eos_retired=sum(
+            1 for rs in result.request_stats if rs.finish_reason == "eos"
+        ),
+        queue_delay_p99_s=percentile(stats.queue_delay_s, 99),
+        tier_switches=stats.tier_switches,
+        slo_total=stats.slo_total,
+        slo_attained=stats.slo_attained,
     )
 
 
@@ -257,11 +349,18 @@ def run_soak(
     drift_limit: Optional[float] = None,
     spot_check: int = 0,
     progress: Optional[Callable[[WindowAudit], None]] = None,
+    loop: str = "closed",
+    policy=None,
+    step_time_s: float = 0.01,
+    clock: str = "virtual",
 ) -> SoakReport:
     """Stream ``spec``'s workload through the scheduler, window by window.
 
     Args:
       spec, seed: the workload draw (``workload.iter_windows(spec, seed)``).
+        A spec with ``eos_probe`` set (the ``churn`` preset) first probes
+        the pool's modal greedy first token (:func:`probe_eos_id`) and
+        stamps it as the trace's ``eos_id``.
       batch_size: slot-pool size; the prompt bucket / generation capacity
         come from ``spec.prompt_len`` / ``spec.max_new``.
       window_size: requests per window; one window is materialized at a
@@ -269,23 +368,52 @@ def run_soak(
       scheduler: ``"continuous"`` or ``"static"`` (the baseline loop;
         parity spot-checks are skipped there, see module docstring).
       quality: pool accuracy tier; tier-tagged requests in the workload
-        are checked against it at admission.
+        are checked against it at admission (tier-enforcing policies).
       drift_limit: if set, a later window's TTFT p99 exceeding
         ``drift_limit`` times the first window's is a violation.
       spot_check: number of request ids (sampled deterministically from
         the seed) to re-serve alone, unpadded, and bit-compare.  Runs
-        only on exact continuous pools (``quality=None``) — see the
-        module docstring for why approx tiers have no cross-batch
-        oracle; skipped checks report as ``spot_checks == 0``.
+        only on exact continuous pools (``quality=None``) under a
+        non-tier-switching policy — see the module docstring for why
+        approx/switched tiers have no cross-batch oracle; skipped
+        checks report as ``spot_checks == 0``.
       progress: optional callback invoked with each :class:`WindowAudit`.
+      loop: ``"closed"`` (legacy queue drain) or ``"open"`` — each
+        window's arrival clocks (rebased to the window start) gate
+        admission, measuring queue delay and backpressure.  Continuous
+        scheduler only.
+      policy: admission policy name or instance for the continuous
+        scheduler (see :mod:`repro.serve.policy`); per-run state resets
+        at every window boundary, so each window is one deterministic
+        policy episode.
+      step_time_s, clock: the open-loop clock (see
+        :meth:`ContinuousScheduler.run`); the default virtual clock
+        makes every soak timing deterministic.
     """
     if scheduler not in ("continuous", "static"):
         raise ValueError(f"scheduler must be continuous|static, got {scheduler!r}")
+    if loop not in ("closed", "open"):
+        raise ValueError(f"loop must be closed|open, got {loop!r}")
+    if loop == "open" and scheduler != "continuous":
+        raise ValueError("open-loop soak requires the continuous scheduler")
     if spot_check < 0:
         raise ValueError(f"spot_check must be >= 0, got {spot_check}")
+    pol: Optional[AdmissionPolicy] = (
+        get_policy(policy) if policy is not None else None
+    )
+    if spec.eos_probe and spec.eos_id is None:
+        spec = dataclasses.replace(
+            spec, eos_id=probe_eos_id(model, params, spec, seed=seed,
+                                      quality=quality),
+        )
 
+    # a tier-switching policy serves sampled requests at pressure-dependent
+    # tiers, so the unpadded static oracle is only valid under static
+    # admission on an exact pool
+    static_admission = pol is None or isinstance(pol, StaticTier)
     sample_ids: set = set()
-    if spot_check and scheduler == "continuous" and quality is None:
+    if (spot_check and scheduler == "continuous" and quality is None
+            and static_admission):
         picker = np.random.default_rng(seed + 1)
         sample_ids = set(
             int(i) for i in picker.choice(
@@ -313,7 +441,16 @@ def run_soak(
 
     for k, (window_reqs, times) in enumerate(iter_windows(spec, seed, window_size)):
         if scheduler == "continuous":
-            result = sched.run(window_reqs, warmup=False)
+            if loop == "open":
+                # window arrivals rebased to the window start: each window
+                # is a self-contained open-loop episode
+                arrivals = [t - times[0] for t in times]
+                result = sched.run(
+                    window_reqs, warmup=False, arrivals_s=arrivals,
+                    policy=pol, step_time_s=step_time_s, clock=clock,
+                )
+            else:
+                result = sched.run(window_reqs, warmup=False, policy=pol)
         else:
             result = static_serve_loop(
                 model, params, window_reqs, batch_size=batch_size,
@@ -380,4 +517,6 @@ def run_soak(
         spot_checks=len(sampled),
         spot_check_failures=failures,
         violations=tuple(violations),
+        loop=loop,
+        policy=pol.name if pol is not None else "",
     )

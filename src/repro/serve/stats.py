@@ -102,6 +102,15 @@ class ServeStats:
     ttft_s: tuple = ()  # per-request time-to-first-token
     request_latencies_s: tuple = ()  # per-request end-to-end latency
     quality: str = ""  # accuracy tier the pool was resolved to ("" = none)
+    # ---- open-loop clocked admission (all default-off for old readers)
+    open_loop: bool = False  # arrival-clocked admission vs queue drain
+    policy: str = ""  # admission policy name ("" = implicit static)
+    queue_delay_s: tuple = ()  # open loop: per-request admission - arrival
+    tier_switches: int = 0  # pool tier transitions the policy performed
+    rejected: int = 0  # requests the policy shed (offered, never served)
+    starved: int = 0  # offered but neither served nor shed (must be 0)
+    slo_total: int = 0  # offered requests carrying a TTFT SLO
+    slo_attained: int = 0  # of those, served with ttft <= slo
 
     @property
     def tokens_per_s(self) -> float:
@@ -111,6 +120,19 @@ class ServeStats:
     def requests_per_s(self) -> float:
         return self.requests / self.wall_s if self.wall_s > 0 else 0.0
 
+    @property
+    def slo_attainment(self) -> Optional[float]:
+        """Fraction of SLO-carrying *offered* requests served within SLO.
+
+        Rejected/starved SLO requests count against the denominator (a
+        shedding policy cannot improve this by refusing work); ``None``
+        when no offered request carried an SLO — the same
+        no-data-is-not-zero convention as :func:`percentile`.
+        """
+        if self.slo_total == 0:
+            return None
+        return self.slo_attained / self.slo_total
+
     def summary(self) -> str:
         extra = ""
         if self.scheduler == "continuous":
@@ -118,12 +140,23 @@ class ServeStats:
                 f", {self.slot_utilization:.0%} slot util, "
                 f"ttft p50 {fmt_ms(self.ttft_s, 50)}"
             )
+        if self.open_loop:
+            # ttft above is arrival-based in open loop; queue delay is its
+            # waiting component — both keep the n/a-on-empty guard
+            extra += f", queue p50 {fmt_ms(self.queue_delay_s, 50)}"
+            att = self.slo_attainment
+            extra += f", slo {att:.0%}" if att is not None else ""
+            if self.rejected:
+                extra += f", {self.rejected} rejected"
+            if self.tier_switches:
+                extra += f", {self.tier_switches} tier switches"
+        pol = f" [{self.policy}]" if self.policy and self.open_loop else ""
         tier = f" [tier {self.quality}]" if self.quality else ""
         return (
             f"[{self.scheduler}] served {self.requests} requests, "
             f"{self.tokens_out} tokens in {self.wall_s:.2f}s "
             f"({self.tokens_per_s:.1f} tok/s on {self.devices} device(s))"
-            + extra + tier
+            + extra + pol + tier
         )
 
 
@@ -135,6 +168,13 @@ class ServeResult:
     request_stats: tuple  # of RequestStats, retirement order
     outputs: dict  # request id -> np.ndarray int32 generated tokens
     accounting: Optional[SlotAccounting] = None  # slot ledger (both loops fill it)
+    # of policy.TierSwitch, in order — the autoscaling event stream an
+    # SLO-adaptive run produces (empty for static/closed-loop runs)
+    tier_switches: tuple = ()
+    # of RequestStats with finish_reason "rejected": offered requests the
+    # admission policy shed.  Kept out of request_stats/outputs so parity
+    # and audit consumers only ever see rows that actually decoded.
+    rejected: tuple = ()
 
     def tokens_for(self, request_id: int) -> np.ndarray:
         return self.outputs[request_id]

@@ -26,10 +26,11 @@ The knobs, each a small named model rather than a magic constant:
   requests ride any pool; tagged ones must match it).
 * **Abuse presets** — ``flood`` (every request pins the prompt bucket
   and the full generation budget: worst-case KV residency) and ``churn``
-  (budget-1 requests at high rate: every admission retires immediately,
-  maximizing slot-recycling pressure — the deterministic equivalent of
-  instant-EOS clients, since EOS emission depends on model weights but
-  budget exhaustion does not).
+  (near-minimal budgets at high rate: most admissions retire
+  immediately, maximizing slot-recycling pressure — and with
+  ``eos_probe`` the soak harness stamps the pool's modal greedy first
+  token as the trace's ``eos_id``, so the longer-budget tail retires by
+  *true instant EOS*, not just budget exhaustion).
 
 Requests are drawn lazily (:func:`iter_requests` / :func:`iter_windows`)
 so a 100k-request soak never materializes the whole trace.
@@ -86,6 +87,16 @@ class WorkloadSpec:
     lognormal_sigma: float = 0.8
     tier_mix: tuple = ()  # ((tier_name_or_None, weight), ...); () = untagged
     eos_id: Optional[int] = None
+    # per-request TTFT SLO (seconds) stamped on every generated request;
+    # None = no SLO.  The open-loop scheduler scores attainment against
+    # it (repro.serve.policy drives tier degradation from the same
+    # target).
+    slo_ttft_s: Optional[float] = None
+    # ask the soak harness to *probe* the pool's modal greedy first token
+    # and use it as the trace's eos_id (repro.serve.soak.probe_eos_id) —
+    # turns the churn preset's budget-capped retirement into true
+    # instant-EOS retirement without hardcoding a weight-dependent token.
+    eos_probe: bool = False
 
     def __post_init__(self):
         if self.requests < 1:
@@ -114,6 +125,8 @@ class WorkloadSpec:
                 raise ValueError(f"tier_mix names must be str or None, got {tier!r}")
             if not weight > 0:
                 raise ValueError(f"tier_mix weight for {tier!r} must be > 0, got {weight}")
+        if self.slo_ttft_s is not None and self.slo_ttft_s <= 0:
+            raise ValueError(f"slo_ttft_s must be > 0, got {self.slo_ttft_s}")
 
 
 # Named traffic shapes: overrides applied on top of the caller's sizes.
@@ -124,10 +137,15 @@ PRESETS: dict[str, dict] = {
     "bursty": {"arrival": "bursty", "prompt_dist": "zipf", "gen_dist": "lognormal"},
     # abusive client: every request pins the bucket and the full budget
     "flood": {"arrival": "immediate", "prompt_dist": "fixed", "gen_dist": "fixed"},
-    # abusive client: budget-1 requests at high rate — every admission
-    # retires on the spot, maximizing slot-recycling churn
+    # abusive client: near-minimal budgets at high rate — most admissions
+    # retire on the spot, maximizing slot-recycling churn.  Budgets are
+    # zipf from 1 (mostly 1, short tail above it) and eos_probe asks the
+    # soak harness to stamp the pool's modal greedy first token as the
+    # trace's eos_id, so the tail rows retire by *true instant EOS*
+    # rather than budget exhaustion — real abusive-client behavior, not
+    # just its deterministic stand-in.
     "churn": {"arrival": "poisson", "rate_rps": 256.0, "prompt_dist": "zipf",
-              "gen_dist": "min", "min_gen": 1},
+              "gen_dist": "zipf", "min_gen": 1, "eos_probe": True},
 }
 
 
@@ -238,7 +256,7 @@ def iter_requests(
         tokens = rng.integers(0, spec.vocab_size, size=length).astype(np.int32)
         quality = tiers[int(rng.choice(len(tiers), p=probs))] if spec.tier_mix else None
         yield Request(id=i, tokens=tokens, max_new=budget, eos_id=spec.eos_id,
-                      quality=quality), t
+                      quality=quality, slo_ttft_s=spec.slo_ttft_s), t
 
 
 def iter_windows(

@@ -1,0 +1,366 @@
+"""Admission policies + open-loop clocked scheduling (repro.serve.policy).
+
+Four layers of guarantees:
+
+* **Policy units** — ``get_policy`` resolution, ``Reject`` shedding at
+  its depth bound, ``SLOAdaptive`` ladder validation against the
+  ``engine.config`` controller, and the hysteresis state machine driven
+  by synthetic :class:`LoadSnapshot` ticks (degrade streak, recovery
+  streak, the ``min_dwell_ticks`` refractory window that forbids
+  oscillation on the boundary).
+* **Open-loop semantics** — ``StaticTier`` with everything arriving at
+  t=0 bit-matches the closed-loop scheduler; TTFT/latency are re-based
+  to *arrival* (queueing included) with ``queue_delay_s`` split out;
+  ``ServeStats.summary`` renders the open-loop fields with the
+  n/a-on-empty guards.
+* **Deterministic adaptation** — the same seeded bursty trace on the
+  virtual clock replays the identical tier-switch sequence, with both a
+  degrade and a recovery observed.
+* **The acceptance comparison** — on the benchmark's bursty trace,
+  SLOAdaptive attains strictly more TTFT SLOs than StaticTier(high) at
+  an equal-or-better queue-delay p99, with zero starved requests (the
+  reduced-size twin of the gated ``BENCH_serve_throughput.json`` rows
+  CI compares against).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.engine.config import ripple_delay, segmented_delay, tier_cycle_factor
+from repro.models.registry import build_model
+from repro.serve import (
+    ContinuousScheduler,
+    Request,
+    Reject,
+    SLOAdaptive,
+    StaticTier,
+    continuous_serve_loop,
+    get_policy,
+    synth_requests,
+)
+from repro.serve.policy import AdmissionPolicy, LoadSnapshot
+from repro.serve.request import RequestStats
+from repro.serve.stats import ServeStats
+from repro.serve.workload import generate, preset_spec
+
+PROMPT, GEN = 8, 4
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _snap(queue_depth, *, step=0, now=0.0, batch=4):
+    return LoadSnapshot(now_s=now, step=step, queue_depth=queue_depth,
+                        pending=0, live_rows=batch, batch_size=batch)
+
+
+# ------------------------------------------------------------- policy units
+def test_get_policy_resolution():
+    assert isinstance(get_policy("static"), StaticTier)
+    assert isinstance(get_policy("slo-adaptive"), SLOAdaptive)
+    assert isinstance(get_policy("reject"), Reject)
+    inst = Reject(max_queue_depth=3)
+    assert get_policy(inst) is inst
+    with pytest.raises(ValueError, match="policy kwargs"):
+        get_policy(inst, max_queue_depth=5)
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        get_policy("fifo")
+
+
+def test_reject_sheds_beyond_depth_bound():
+    pol = Reject(max_queue_depth=3)
+    req = Request(id=0, tokens=np.zeros(4, np.int32), max_new=1)
+    assert pol.admit(req, _snap(3))
+    assert not pol.admit(req, _snap(4))
+    # default bound scales with the pool: depth_factor * batch_size
+    pol = Reject(depth_factor=2.0)
+    assert pol.admit(req, _snap(8, batch=4))
+    assert not pol.admit(req, _snap(9, batch=4))
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        Reject(max_queue_depth=0)
+    with pytest.raises(ValueError, match="depth_factor"):
+        Reject(depth_factor=0.0)
+
+
+def test_slo_adaptive_validates_ladder_via_controller():
+    with pytest.raises(ValueError, match="unknown quality tier"):
+        SLOAdaptive(ladder=("high", "turbo"))
+    with pytest.raises(ValueError, match="ladder"):
+        SLOAdaptive(ladder=("high",))
+    with pytest.raises(ValueError, match="slo_ttft_s"):
+        SLOAdaptive(slo_ttft_s=0.0)
+    pol = SLOAdaptive()
+    # every rung is pre-resolved by the engine.config controller
+    assert set(pol.resolutions) == set(pol.ladder)
+    for qc in pol.resolutions.values():
+        assert qc.per_target
+
+
+def test_slo_adaptive_hysteresis_state_machine():
+    pol = SLOAdaptive(slo_ttft_s=1.0, degrade_after=2, recover_after=3,
+                      min_dwell_ticks=3, queue_high=2.0, queue_low=0.5)
+    pol.begin("high")
+    hot, calm = _snap(100), _snap(0)
+    assert pol.tier(hot) == "high"  # one breach is not a streak
+    assert pol.tier(hot) == "balanced"  # second consecutive breach degrades
+    assert [s.reason for s in pol.switches] == ["degrade:queue"]
+    # refractory window: breaches keep arriving but no switch may fire
+    for _ in range(3):
+        assert pol.tier(hot) == "balanced"
+    assert len(pol.switches) == 1
+    # once the dwell expires, the (still-standing) breach streak degrades again
+    assert pol.tier(hot) == "draft"
+    # recovery needs recover_after calm ticks *and* an expired dwell window
+    for _ in range(3):
+        assert pol.tier(calm) == "draft"
+    assert pol.tier(calm) == "balanced"
+    assert pol.switches[-1].reason == "recover"
+    # a fresh breach inside the new dwell window cannot oscillate back
+    assert pol.tier(hot) == "balanced"
+    assert pol.tier(hot) == "balanced"
+    assert len(pol.switches) == 3
+
+
+_RS = RequestStats(id=0, prompt_len=4, tokens_out=1, admit_step=0,
+                   ttft_s=0.0, latency_s=0.0, finish_reason="budget")
+
+
+def test_slo_adaptive_ttft_signal_degrades():
+    pol = SLOAdaptive(slo_ttft_s=0.1, degrade_after=2, min_dwell_ticks=0)
+    pol.begin("high")
+    for _ in range(8):  # rolling window full of SLO-violating TTFTs
+        pol.observe(dataclasses.replace(_RS, ttft_s=0.5))
+    calm_depth = _snap(0)
+    pol.tier(calm_depth)
+    assert pol.tier(calm_depth) == "balanced"
+    assert pol.switches[0].reason == "degrade:ttft"
+
+
+def test_tier_cycle_factor_monotone():
+    # the virtual clock's tier cost model: segmented tiers finish their
+    # carry chains in fewer cycles, so factors fall monotonically
+    assert tier_cycle_factor(None) == 1.0
+    assert tier_cycle_factor("exact") == 1.0
+    f = [tier_cycle_factor(t) for t in ("high", "balanced", "draft")]
+    assert f[0] > f[1] > f[2] > 0.0
+    # consistent with the paper's gate-delay model over the controller's
+    # per-target resolution
+    from repro.engine.config import resolve_tier
+
+    qc = resolve_tier("high")
+    expected = np.mean(
+        [segmented_delay(q.n, q.t) for q in qc.per_target]
+    ) / ripple_delay(8)
+    assert tier_cycle_factor("high") == pytest.approx(expected)
+
+
+# -------------------------------------------------------- open-loop semantics
+def test_open_loop_static_bitmatches_closed_loop(served):
+    cfg, model, params = served
+    queue = synth_requests(8, prompt_len=PROMPT, gen=GEN,
+                           vocab_size=cfg.vocab_size, seed=11)
+    closed = continuous_serve_loop(
+        model, params, queue, batch_size=2, prompt_len=PROMPT, max_new=GEN,
+        warmup=False,
+    )
+    opened = continuous_serve_loop(
+        model, params, queue, batch_size=2, prompt_len=PROMPT, max_new=GEN,
+        warmup=False, arrivals_s=[0.0] * len(queue), policy=StaticTier(),
+    )
+    assert opened.stats.open_loop and not closed.stats.open_loop
+    assert opened.stats.policy == "static"
+    for r in queue:
+        np.testing.assert_array_equal(closed.outputs[r.id], opened.outputs[r.id])
+    assert [rs.id for rs in closed.request_stats] == \
+           [rs.id for rs in opened.request_stats]
+    assert opened.stats.starved == 0 and opened.stats.rejected == 0
+
+
+def test_open_loop_ttft_rebased_to_arrival(served):
+    cfg, model, params = served
+    queue = synth_requests(6, prompt_len=PROMPT, gen=GEN,
+                           vocab_size=cfg.vocab_size, seed=13)
+    arrivals = [0.4 * i for i in range(len(queue))]
+    result = continuous_serve_loop(
+        model, params, queue, batch_size=2, prompt_len=PROMPT, max_new=GEN,
+        warmup=False, arrivals_s=arrivals, step_time_s=0.01,
+    )
+    by_id = {rs.id: rs for rs in result.request_stats}
+    for req, arr in zip(queue, arrivals):
+        rs = by_id[req.id]
+        assert rs.arrival_s == pytest.approx(arr)
+        # arrival-based decomposition: ttft = queue wait + admission cost
+        assert rs.queue_delay_s is not None and rs.queue_delay_s >= 0.0
+        assert rs.ttft_s >= rs.queue_delay_s
+        assert rs.latency_s >= rs.ttft_s
+    assert len(result.stats.queue_delay_s) == len(queue)
+
+
+def test_open_loop_requires_valid_arrivals(served):
+    cfg, model, params = served
+    queue = synth_requests(3, prompt_len=PROMPT, gen=GEN,
+                           vocab_size=cfg.vocab_size, seed=1)
+    sched = ContinuousScheduler(model, params, batch_size=2,
+                                prompt_len=PROMPT, max_new=GEN)
+    with pytest.raises(ValueError, match="arrivals"):
+        sched.run(queue, warmup=False, arrivals_s=[0.0])
+    with pytest.raises(ValueError, match="non-decreasing"):
+        sched.run(queue, warmup=False, arrivals_s=[1.0, 0.5, 2.0])
+    with pytest.raises(ValueError, match="step_time_s"):
+        sched.run(queue, warmup=False, arrivals_s=[0.0, 0.0, 0.0],
+                  step_time_s=0.0)
+    with pytest.raises(ValueError, match="clock"):
+        sched.run(queue, warmup=False, arrivals_s=[0.0, 0.0, 0.0],
+                  clock="sundial")
+
+
+def test_summary_renders_open_loop_fields():
+    base = dict(requests=4, tokens_out=16, wall_s=1.0, prefill_s=0.2,
+                decode_s=0.8, batch_latencies_s=(), devices=1,
+                scheduler="continuous")
+    closed = ServeStats(**base)
+    assert "queue p50" not in closed.summary()
+    empty = ServeStats(**base, open_loop=True, policy="static")
+    # n/a-on-empty guard: no queue delays / SLOs recorded yet
+    assert "queue p50 n/a" in empty.summary()
+    assert ", slo " not in empty.summary()
+    full = ServeStats(**base, open_loop=True, policy="slo-adaptive",
+                      queue_delay_s=(0.1, 0.2), tier_switches=3, rejected=1,
+                      slo_total=4, slo_attained=3)
+    s = full.summary()
+    assert "queue p50" in s and "slo 75%" in s
+    assert "3 tier switches" in s and "1 rejected" in s
+    assert "[slo-adaptive]" in s
+    assert full.slo_attainment == pytest.approx(0.75)
+    assert ServeStats(**base).slo_attainment is None
+
+
+# --------------------------------------------------- deterministic adaptation
+def _burst_then_quiet(cfg):
+    """20 requests at t=0 (queue blows past queue_high) then a widely
+    spaced tail (queue drains to zero so recovery streaks can build)."""
+    queue = synth_requests(32, prompt_len=PROMPT, gen=GEN,
+                           vocab_size=cfg.vocab_size, seed=17,
+                           vary_budget=False)
+    arrivals = [0.0] * 20 + [2.0 + 0.3 * i for i in range(12)]
+    return queue, arrivals
+
+
+def _adaptive():
+    # queue-driven only (slo_ttft_s huge): deterministic from the trace
+    return SLOAdaptive(slo_ttft_s=100.0, degrade_after=2, recover_after=3,
+                       min_dwell_ticks=3)
+
+
+def test_slo_adaptive_replays_identical_switch_sequence(served):
+    cfg, model, params = served
+
+    def run():
+        queue, arrivals = _burst_then_quiet(cfg)
+        result = continuous_serve_loop(
+            model, params, queue, batch_size=4, prompt_len=PROMPT,
+            max_new=GEN, warmup=False, quality="high",
+            arrivals_s=arrivals, policy=_adaptive(), step_time_s=0.01,
+        )
+        return result
+
+    a, b = run(), run()
+    sig_a = [(s.step, s.from_tier, s.to_tier, s.reason) for s in a.tier_switches]
+    sig_b = [(s.step, s.from_tier, s.to_tier, s.reason) for s in b.tier_switches]
+    assert sig_a == sig_b  # seeded trace => identical switch sequence
+    assert [s.now_s for s in a.tier_switches] == [s.now_s for s in b.tier_switches]
+    reasons = [s.reason for s in a.tier_switches]
+    assert any(r.startswith("degrade:") for r in reasons)
+    assert "recover" in reasons
+    # the event stream is internally consistent: each switch leaves from
+    # the tier the previous one arrived at, at nondecreasing times
+    for prev, cur in zip(a.tier_switches, a.tier_switches[1:]):
+        assert cur.from_tier == prev.to_tier
+        assert cur.now_s >= prev.now_s
+    assert a.stats.tier_switches == len(reasons)
+    assert a.stats.starved == 0
+    # served tiers are recorded per request and only name ladder rungs
+    tiers = {rs.tier_served for rs in a.request_stats}
+    assert tiers <= {"high", "balanced", "draft"}
+    assert len(tiers) > 1  # the pool really did serve at multiple tiers
+
+
+def test_reject_policy_sheds_and_counts_slo(served):
+    cfg, model, params = served
+    queue = [dataclasses.replace(r, slo_ttft_s=10.0)
+             for r in synth_requests(12, prompt_len=PROMPT, gen=GEN,
+                                     vocab_size=cfg.vocab_size, seed=19)]
+    result = continuous_serve_loop(
+        model, params, queue, batch_size=2, prompt_len=PROMPT, max_new=GEN,
+        warmup=False, arrivals_s=[0.0] * len(queue),
+        policy=Reject(max_queue_depth=2), step_time_s=0.01,
+    )
+    stats = result.stats
+    assert stats.rejected > 0
+    assert stats.requests + stats.rejected == len(queue)
+    assert stats.starved == 0
+    for rs in result.rejected:
+        assert rs.finish_reason == "rejected"
+        assert rs.id not in result.outputs
+    # rejected SLO-carrying requests count against attainment: the
+    # denominator is *offered*, so shedding cannot game the metric
+    assert stats.slo_total == len(queue)
+    assert stats.slo_attained <= stats.requests
+    assert stats.slo_attainment < 1.0
+
+
+# ------------------------------------------------------ acceptance comparison
+def test_adaptive_beats_static_high_on_bursty_trace(served):
+    """Reduced twin of the gated BENCH_serve_throughput open-loop rows:
+    on the same seeded bursty trace, SLOAdaptive must attain strictly
+    more TTFT SLOs than StaticTier with the pool pinned at ``high``, at
+    an equal-or-better queue-delay p99, and neither run may starve or
+    shed a request.  CI gates the committed baseline numbers; this test
+    pins the comparison itself."""
+    from repro.serve.stats import percentile
+
+    cfg, model, params = served
+    spec = preset_spec("bursty", requests=48, prompt_len=PROMPT, max_new=6,
+                       vocab_size=cfg.vocab_size, rate_rps=256.0,
+                       slo_ttft_s=0.05)
+    draw = generate(spec, seed=0)
+    results = {}
+    for policy in (StaticTier(),
+                   SLOAdaptive(slo_ttft_s=0.05, degrade_after=2,
+                               recover_after=4, min_dwell_ticks=4)):
+        sched = ContinuousScheduler(model, params, batch_size=4,
+                                    prompt_len=PROMPT, max_new=6,
+                                    quality="high")
+        results[policy.name] = sched.run(
+            list(draw.requests), warmup=False,
+            arrivals_s=list(draw.arrivals_s), policy=policy,
+            step_time_s=0.01,
+        ).stats
+    st, ad = results["static"], results["slo-adaptive"]
+    assert st.starved == ad.starved == 0
+    assert st.rejected == ad.rejected == 0
+    assert st.tier_switches == 0 and ad.tier_switches > 0
+    assert ad.slo_attainment > st.slo_attainment
+    assert percentile(ad.queue_delay_s, 99) <= percentile(st.queue_delay_s, 99)
+
+
+def test_closed_loop_accepts_explicit_policy(served):
+    cfg, model, params = served
+    queue = synth_requests(3, prompt_len=PROMPT, gen=GEN,
+                           vocab_size=cfg.vocab_size, seed=2)
+    sched = ContinuousScheduler(model, params, batch_size=2,
+                                prompt_len=PROMPT, max_new=GEN)
+    # closed loop + an explicit policy is fine (StaticTier is implicit
+    # today); the policy still sees admissions
+    result = sched.run(queue, warmup=False, policy=AdmissionPolicy())
+    assert result.stats.requests == len(queue)
+    assert not result.stats.open_loop

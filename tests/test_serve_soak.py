@@ -102,7 +102,13 @@ def test_abuse_presets():
         assert t == 0.0  # the whole flood is queued at once
     churn = preset_spec("churn", requests=30, prompt_len=PROMPT, max_new=GEN,
                         vocab_size=VOCAB)
-    assert all(r.max_new == 1 for r, _ in iter_requests(churn, 0))
+    # churn budgets are zipf from 1: mostly instant-retire with a short
+    # tail above it, and the preset asks the soak harness to probe a
+    # real eos id so the tail retires by true EOS, not budget
+    buds = [r.max_new for r, _ in iter_requests(churn, 0)]
+    assert min(buds) == 1
+    assert sum(1 for b in buds if b == 1) > len(buds) // 2
+    assert churn.eos_probe and churn.eos_id is None
 
 
 def test_tier_mix_assignment_and_label():
@@ -157,7 +163,7 @@ def test_synth_requests_delegates_and_stays_byte_stable():
     # preset delegation: realistic mixes through the old entry point
     churn = synth_requests(8, prompt_len=8, gen=6, vocab_size=50, seed=0,
                            workload="churn")
-    assert all(r.max_new == 1 for r in churn)
+    assert min(r.max_new for r in churn) == 1  # zipf-from-1 budgets
     tagged = synth_requests(8, prompt_len=8, gen=6, vocab_size=50, seed=0,
                             workload="steady", quality="balanced")
     assert all(r.quality == "balanced" for r in tagged)
@@ -215,6 +221,39 @@ def test_soak_invariants(served, preset, tier):
     # every seat is attributed to a physical slot
     assert sum(report.slot_reuse) == spec.requests
     assert row["seed"] == 3  # failures must reproduce from the row alone
+
+
+def test_churn_eos_probe_retires_rows_before_budget(served):
+    """Regression for the churn preset's true-EOS path: the probed modal
+    first token becomes the trace's eos_id, so tail rows (budget > 1)
+    retire by *emitting EOS* before exhausting max_new — instant-EOS
+    retirement exercised for real, not via the budget-1 stand-in."""
+    from repro.serve.soak import probe_eos_id
+
+    cfg, model, params = served
+    spec = preset_spec("churn", requests=32, prompt_len=PROMPT, max_new=GEN,
+                       vocab_size=cfg.vocab_size)
+    assert spec.eos_probe and spec.eos_id is None
+    eos = probe_eos_id(model, params, spec, seed=0)
+    assert 0 <= eos < cfg.vocab_size
+    w = generate(dataclasses.replace(spec, eos_id=eos, eos_probe=False), seed=0)
+    result = continuous_serve_loop(
+        model, params, list(w.requests), batch_size=2, prompt_len=PROMPT,
+        max_new=GEN, warmup=False,
+    )
+    by_id = {r.id: r for r in w.requests}
+    eos_rows = [rs for rs in result.request_stats if rs.finish_reason == "eos"]
+    assert eos_rows, "probed eos id never fired"
+    early = [rs for rs in eos_rows
+             if len(result.outputs[rs.id]) < by_id[rs.id].max_new]
+    assert early, "no row retired before its budget via EOS"
+    for rs in early:
+        assert result.outputs[rs.id][-1] == eos
+    # the full soak path wires the probe in automatically and stays green
+    report = run_soak(model, params, spec, batch_size=2, seed=0,
+                      window_size=16, spot_check=0)
+    assert report.ok, report.violations
+    assert report.eos_retired > 0
 
 
 def test_soak_static_baseline(served):
