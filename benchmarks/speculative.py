@@ -1,0 +1,166 @@
+"""Self-speculative decoding: bit-match, accept rate, modeled speedup.
+
+For each (draft, verify) quality-tier pair the suite serves one seeded
+mixed-length queue twice through the continuous scheduler on a pool
+resolved to the *verify* tier — once plain greedy, once under
+``SelfSpeculative(k, draft_tier)`` — and reports, per row:
+
+* ``bit_match`` — 1.0 iff every speculative stream equals the plain
+  greedy stream token for token.  This is the layer's core contract
+  (every committed token is the verify engine's argmax) and the hard
+  gate: any KV-rollback bug reads as 0.0 here.  It is only claimed —
+  and only gated — on *exact*-verify rows: approximate tiers quantize
+  with shape-dependent artifacts, so their ``(B, k+1)`` verify forward
+  is a different numerical program than their ``s=1`` decode and
+  cross-shape bit-parity is undefined by construction (the same reason
+  soak parity spot-checks run only on exact pools).  Approximate-verify
+  rows record the informational ``stream_agreement`` fraction instead.
+* ``accept_rate`` — accepted / proposed draft tokens.  Greedy decode is
+  deterministic for a fixed queue and seed, so this is a deterministic
+  quantity (unlike wall time) and gates exactly.
+* ``accept_rate_est`` / ``accept_within_bound`` — the error-model lower
+  bound from ``engine_config.accept_rate_estimate`` (product over
+  budgeted GEMM classes of ``1 - er_draft - er_verify``) and whether
+  the measured rate respects it.
+* ``speedup_modeled`` — plain ``modeled_cost`` / speculative
+  ``modeled_cost``, where each decode round is priced on the virtual
+  gate-delay clock (``tier_cycle_factor``: a draft step costs 0.55x an
+  exact step, a verify forward one verify-tier step).  Under that cost
+  model no registered pair clears break-even — the honest, gated
+  finding (docs/serving.md §Self-speculative decoding): speculation
+  here buys *verify-tier quality at draft-tier step latency*, not
+  throughput, until a cost model with a wider draft/verify gap applies.
+
+All gated metrics are seeded-deterministic; the queue is the same
+``synth_requests`` draw for every pair, so rows differ only in tiers.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):  # direct script run: python benchmarks/<mod>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.registry import Suite, register_suite
+
+FULL = {"requests": 16, "batch_size": 4, "prompt_len": 16, "gen": 8, "spec_k": 4}
+REDUCED = {"requests": 8, "batch_size": 2, "prompt_len": 8, "gen": 6, "spec_k": 3}
+
+ARCHS = ("qwen3-0.6b",)
+# (draft, verify): the degenerate pair pins the accept-everything edge,
+# the rest span the registered ladder against exact and approximate
+# verification.
+TIER_PAIRS = (
+    ("exact", "exact"),
+    ("draft", "exact"),
+    ("balanced", "exact"),
+    ("draft", "balanced"),
+)
+
+
+def rows(reduced: bool = False) -> list:
+    from repro.configs.registry import get_config
+    from repro.engine import config as engine_config
+    from repro.models.registry import build_model
+    from repro.serve import ContinuousScheduler, SelfSpeculative, synth_requests
+
+    cfg_run = REDUCED if reduced else FULL
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        queue = synth_requests(
+            cfg_run["requests"], prompt_len=cfg_run["prompt_len"],
+            gen=cfg_run["gen"], vocab_size=cfg.vocab_size, seed=0,
+        )
+        for draft, verify in TIER_PAIRS:
+            pool_quality = None if verify == "exact" else verify
+            plain = ContinuousScheduler(
+                model, params, batch_size=cfg_run["batch_size"],
+                prompt_len=cfg_run["prompt_len"], max_new=cfg_run["gen"],
+                quality=pool_quality,
+            ).run(queue)
+            spec = ContinuousScheduler(
+                model, params, batch_size=cfg_run["batch_size"],
+                prompt_len=cfg_run["prompt_len"], max_new=cfg_run["gen"],
+                quality=pool_quality,
+                strategy=SelfSpeculative(k=cfg_run["spec_k"], draft_tier=draft),
+            ).run(queue)
+            agreement = np.mean([
+                float(np.array_equal(plain.outputs[r.id], spec.outputs[r.id]))
+                for r in queue
+            ])
+            est = engine_config.accept_rate_estimate(draft, verify)
+            measured = spec.stats.accept_rate
+            best_k, best_gain = engine_config.best_spec_k(draft, verify)
+            out.append({
+                "table": "speculative",
+                "arch": arch,
+                "draft_tier": draft,
+                "verify_tier": verify,
+                "spec_k": cfg_run["spec_k"],
+                "batch_size": cfg_run["batch_size"],
+                "prompt_len": cfg_run["prompt_len"],
+                "gen": cfg_run["gen"],
+                "requests": cfg_run["requests"],
+                "tokens_out": spec.stats.tokens_out,
+                # bit_match is the gated contract on exact verification;
+                # on approximate verify tiers cross-shape parity is
+                # undefined, so the row carries None (ungated) and the
+                # informational agreement fraction instead
+                "bit_match": (
+                    (1.0 if agreement == 1.0 else 0.0)
+                    if verify == "exact" else None
+                ),
+                "stream_agreement": round(float(agreement), 4),
+                "accept_rate": (
+                    None if measured is None else round(measured, 4)
+                ),
+                "accept_rate_est": round(est, 4),
+                "accept_within_bound": (
+                    1.0 if measured is not None and measured >= est else 0.0
+                ),
+                "spec_rounds": spec.stats.spec_rounds,
+                "spec_proposed": spec.stats.spec_proposed,
+                "spec_accepted": spec.stats.spec_accepted,
+                "spec_rolled_back": spec.stats.spec_rolled_back,
+                "decode_steps_plain": plain.stats.decode_steps,
+                "decode_steps_spec": spec.stats.decode_steps,
+                "modeled_cost_plain": round(plain.stats.modeled_cost, 4),
+                "modeled_cost_spec": round(spec.stats.modeled_cost, 4),
+                "speedup_modeled": (
+                    round(plain.stats.modeled_cost / spec.stats.modeled_cost, 4)
+                    if spec.stats.modeled_cost > 0 else 0.0
+                ),
+                "best_k_modeled": best_k,
+                "best_gain_modeled": round(best_gain, 4),
+            })
+    return out
+
+
+register_suite(Suite(
+    name="speculative",
+    rows=rows,
+    description="self-speculative decoding across quality tiers: bit-match "
+                "vs plain greedy, accept rate vs the error-model bound, "
+                "modeled round-cost speedup",
+    key_fields=("table", "arch", "draft_tier", "verify_tier", "spec_k",
+                "batch_size", "prompt_len", "gen"),
+    # Every gated metric is seeded-deterministic: bit_match and
+    # accept_within_bound are the hard 1.0 contracts, accept_rate and
+    # speedup_modeled are pure functions of the fixed queue + weights +
+    # the virtual gate-delay cost model (no wall clock anywhere).
+    higher_is_better=("bit_match", "accept_within_bound", "accept_rate",
+                      "speedup_modeled"),
+))
+
+
+if __name__ == "__main__":
+    for r in rows(reduced=True):
+        print(r)

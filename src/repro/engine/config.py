@@ -76,6 +76,10 @@ __all__ = [
     "resolve_tier",
     "apply_quality",
     "tier_cycle_factor",
+    "accept_rate_estimate",
+    "expected_round_tokens",
+    "speculation_gain",
+    "best_spec_k",
 ]
 
 
@@ -476,6 +480,118 @@ def tier_cycle_factor(
     mean_delay = sum(segmented_delay(q.n, q.t) for q in qc.per_target)
     mean_delay /= len(qc.per_target)
     return mean_delay / ripple_delay(n)
+
+
+# ------------------------------------------------- self-speculative decoding
+@functools.lru_cache(maxsize=256)
+def accept_rate_estimate(
+    draft_tier: Union[str, QualityTier],
+    verify_tier: Union[str, QualityTier],
+    *,
+    n: int = DEFAULT_N,
+    order: int = 1,
+) -> float:
+    """Closed-form lower bound on the draft-vs-verify agreement rate.
+
+    Self-speculative decoding (``repro.serve.strategy``) runs the *same*
+    weights at two tiers; a draft proposal is accepted when both tiers'
+    greedy argmax agree.  The tiers differ only through their
+    approximate multiplies, so per budgeted GEMM class the probability
+    that *either* tier's multiply deviates from exact is union-bounded
+    by the sum of the two resolved splits' Eq. 10 ER estimates
+    (``sweep_t(n)[t-1].er_bound``); the product over classes of
+    ``max(0, 1 - (er_d + er_v))`` lower-bounds the chance that every
+    multiply in both forwards agrees with the exact computation — and
+    two computations that each match exact match each other.  Argmax
+    additionally absorbs deviations too small to reorder the top logit,
+    so the *measured* accept rate sits at or above this estimate (the
+    ``speculative`` benchmark suite gates exactly that inequality).
+
+    Degenerate pairs resolve to 1.0: two tiers with identical resolved
+    (mode, per-target) configurations run bit-identical forwards.
+    """
+    qd = resolve_tier(get_tier(draft_tier), n=n, order=order)
+    qv = resolve_tier(get_tier(verify_tier), n=n, order=order)
+    if (qd.mode, qd.per_target) == (qv.mode, qv.per_target):
+        return 1.0
+
+    def er(qc: QualityConfig, target: str) -> float:
+        for q in qc.per_target:
+            if q.target == target:
+                return sweep_t(q.n, order=order)[q.t - 1].er_bound
+        return 0.0  # unbudgeted target: exact at this tier
+
+    targets = {q.target for q in qd.per_target} | {q.target for q in qv.per_target}
+    est = 1.0
+    for tgt in sorted(targets):
+        est *= max(0.0, 1.0 - (er(qd, tgt) + er(qv, tgt)))
+    return est
+
+
+def expected_round_tokens(accept_rate: float, k: int) -> float:
+    """Expected committed tokens of one speculative round at depth ``k``.
+
+    Acceptance is a per-position Bernoulli(α) chain stopped at the first
+    rejection, plus the verify step's own "bonus" token, so the round
+    commits ``1 + accepted`` tokens with expectation
+    ``(1 - α^(k+1)) / (1 - α)`` — the truncated geometric series —
+    reaching ``k + 1`` exactly at α = 1.
+    """
+    if not 0.0 <= accept_rate <= 1.0:
+        raise ValueError(f"accept_rate must be in [0, 1], got {accept_rate}")
+    if k < 1:
+        raise ValueError(f"speculation depth k must be >= 1, got {k}")
+    if accept_rate >= 1.0:
+        return float(k + 1)
+    return (1.0 - accept_rate ** (k + 1)) / (1.0 - accept_rate)
+
+
+def speculation_gain(
+    draft_tier: Union[str, QualityTier],
+    verify_tier: Union[str, QualityTier],
+    k: int,
+    *,
+    n: int = DEFAULT_N,
+    order: int = 1,
+) -> float:
+    """Modeled tokens-per-cost ratio of speculating vs plain verify decode.
+
+    One speculative round costs ``k * f_draft + f_verify`` exact-step
+    units on the gate-delay clock (:func:`tier_cycle_factor`) and
+    commits ``E = expected_round_tokens(α, k)`` verify-quality tokens;
+    plain decode buys one token per ``f_verify``.  The gain is
+    ``E * f_verify / (k * f_draft + f_verify)`` — above 1.0 speculation
+    is worth it, and at ``draft == verify`` it is exactly 1.0 with the
+    degenerate α = 1 (the bound and the cost model agree that
+    self-speculating against yourself is a no-op).
+    """
+    alpha = accept_rate_estimate(draft_tier, verify_tier, n=n, order=order)
+    e_tokens = expected_round_tokens(alpha, k)
+    f_d = tier_cycle_factor(get_tier(draft_tier).name, n=n, order=order)
+    f_v = tier_cycle_factor(get_tier(verify_tier).name, n=n, order=order)
+    return e_tokens * f_v / (k * f_d + f_v)
+
+
+def best_spec_k(
+    draft_tier: Union[str, QualityTier],
+    verify_tier: Union[str, QualityTier],
+    *,
+    k_max: int = 8,
+    n: int = DEFAULT_N,
+    order: int = 1,
+) -> tuple[int, float]:
+    """The controller's pick of speculation depth: ``(k, gain)`` maximizing
+    :func:`speculation_gain` over ``1 <= k <= k_max`` (ties toward the
+    smaller, lower-variance depth).  Callers treat ``gain <= 1`` as
+    "don't speculate"."""
+    if k_max < 1:
+        raise ValueError(f"k_max must be >= 1, got {k_max}")
+    best = (1, speculation_gain(draft_tier, verify_tier, 1, n=n, order=order))
+    for k in range(2, k_max + 1):
+        g = speculation_gain(draft_tier, verify_tier, k, n=n, order=order)
+        if g > best[1]:
+            best = (k, g)
+    return best
 
 
 def apply_quality(

@@ -38,6 +38,7 @@ from repro.engine import config as engine_config
 from repro.engine import modes as engine_modes
 from repro.models.registry import build_model
 from repro.serve import (
+    SelfSpeculative,
     ServeStats,
     continuous_serve_loop,
     get_policy,
@@ -131,6 +132,22 @@ def main(argv=None) -> None:
     ap.add_argument("--clock", default="virtual", choices=("virtual", "wall"),
                     help="open loop: deterministic virtual clock (default) or "
                          "real sleeping wall clock")
+    ap.add_argument("--strategy", default="greedy",
+                    choices=("greedy", "speculative"),
+                    help="decode strategy (continuous scheduler only): greedy "
+                         "one-token rounds, or self-speculative rounds — k "
+                         "draft-tier proposal steps verified by one batched "
+                         "forward on the verify tier; output bit-matches "
+                         "greedy decode on the verify engine")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative: draft tokens proposed per round")
+    ap.add_argument("--draft-tier", default="draft",
+                    choices=engine_config.list_tiers(),
+                    help="speculative: accuracy tier proposing draft tokens")
+    ap.add_argument("--verify-tier", default=None,
+                    choices=engine_config.list_tiers(),
+                    help="speculative: tier whose engine verifies (default: "
+                         "the pool's own tier)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -157,6 +174,20 @@ def main(argv=None) -> None:
     if args.policy is not None and args.loop != "open":
         ap.error("--policy only applies to --loop open (closed-loop "
                  "admission is the implicit static policy)")
+    if args.strategy == "speculative" and scheduler != "continuous":
+        ap.error("--strategy speculative requires --scheduler continuous")
+
+    strategy = None
+    if args.strategy == "speculative":
+        strategy = SelfSpeculative(
+            k=args.spec_k, draft_tier=args.draft_tier,
+            verify_tier=args.verify_tier,
+        )
+        verify = args.verify_tier or args.quality_tier or "exact"
+        est = engine_config.accept_rate_estimate(args.draft_tier, verify)
+        print(f"# speculative: k={args.spec_k} draft={args.draft_tier} "
+              f"verify={verify}, accept-rate lower bound {est:.1%} "
+              f"(engine_config.accept_rate_estimate)")
 
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(args.seed))
@@ -192,7 +223,7 @@ def main(argv=None) -> None:
             model, params, queue,
             batch_size=args.batch, prompt_len=args.prompt_len,
             max_new=args.gen, mesh=mesh, quality=args.quality_tier,
-            **run_kwargs,
+            strategy=strategy, **run_kwargs,
         )
     else:
         result = static_serve_loop(
@@ -201,6 +232,12 @@ def main(argv=None) -> None:
             seed=args.seed, quality=args.quality_tier,
         )
     print(result.stats.summary())
+    ar = result.stats.accept_rate
+    if ar is not None:
+        print(f"# speculative accept: {result.stats.spec_accepted}/"
+              f"{result.stats.spec_proposed} draft tokens ({ar:.1%}), "
+              f"{result.stats.spec_rolled_back} rolled back over "
+              f"{result.stats.spec_rounds} speculated rounds")
     lat = result.stats.request_latencies_s
     if lat:
         print(

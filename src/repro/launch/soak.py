@@ -38,6 +38,7 @@ from repro.engine import config as engine_config
 from repro.models.registry import build_model
 from repro.serve.policy import POLICIES
 from repro.serve.soak import run_soak
+from repro.serve.strategy import SelfSpeculative
 from repro.serve.workload import PRESETS, preset_spec
 
 __all__ = ["main"]
@@ -92,6 +93,22 @@ def main(argv=None) -> int:
                     choices=engine_config.list_tiers(),
                     help="pool accuracy tier; tier-tagged requests are "
                          "checked against it at admission")
+    ap.add_argument("--strategy", default="greedy",
+                    choices=("greedy", "speculative"),
+                    help="decode strategy (continuous only); speculative "
+                         "pools still pass the parity spot-checks because "
+                         "speculative output bit-matches plain decode, and "
+                         "presets with a spec_fraction (churn/bursty) tag a "
+                         "request fraction to exercise mid-stream switching")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative: draft tokens proposed per round")
+    ap.add_argument("--draft-tier", default="draft",
+                    choices=engine_config.list_tiers(),
+                    help="speculative: accuracy tier proposing draft tokens")
+    ap.add_argument("--verify-tier", default=None,
+                    choices=engine_config.list_tiers(),
+                    help="speculative: tier whose engine verifies (default: "
+                         "the pool's own tier)")
     ap.add_argument("--tier-mix", default="",
                     help="weighted request tier tags, e.g. 'balanced=3,none=1' "
                          "(tags must match --quality-tier or be none)")
@@ -103,6 +120,15 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the report (summary row + per-window audits)")
     args = ap.parse_args(argv)
+
+    strategy = None
+    if args.strategy == "speculative":
+        if args.scheduler != "continuous":
+            ap.error("--strategy speculative requires --scheduler continuous")
+        strategy = SelfSpeculative(
+            k=args.spec_k, draft_tier=args.draft_tier,
+            verify_tier=args.verify_tier,
+        )
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -130,6 +156,7 @@ def main(argv=None) -> int:
         spot_check=args.spot_check, progress=progress,
         loop=args.loop, policy=args.policy,
         step_time_s=args.step_time_ms / 1e3, clock=args.clock,
+        strategy=strategy,
     )
 
     print(report.describe())

@@ -14,6 +14,9 @@ Public surface:
 * :class:`~repro.serve.policy.AdmissionPolicy` and its implementations
   (``StaticTier`` / ``SLOAdaptive`` / ``Reject``) — pluggable admission
   + accuracy-tier control for the open-loop clocked scheduler.
+* :class:`~repro.serve.strategy.DecodeStrategy` and its implementations
+  (``GreedyDecode`` / ``SelfSpeculative``) — the decode-round layer:
+  plain greedy, or self-speculative decoding across quality tiers.
 * :class:`~repro.serve.workload.WorkloadSpec` / ``preset_spec`` —
   traffic-realistic workload generation (arrival processes, long-tail
   lengths, tier mixes, abuse presets).
@@ -39,6 +42,15 @@ from repro.serve.scheduler import (
 )
 from repro.serve.soak import SoakReport, probe_eos_id, run_soak
 from repro.serve.stats import ServeResult, ServeStats, SlotAccounting
+from repro.serve.strategy import (
+    DecodeStrategy,
+    GreedyDecode,
+    RoundResult,
+    RowView,
+    SelfSpeculative,
+    TierEngine,
+    get_strategy,
+)
 from repro.serve.workload import Workload, WorkloadSpec, preset_spec
 
 __all__ = [
@@ -56,6 +68,13 @@ __all__ = [
     "SLOAdaptive",
     "Reject",
     "get_policy",
+    "DecodeStrategy",
+    "GreedyDecode",
+    "SelfSpeculative",
+    "RoundResult",
+    "RowView",
+    "TierEngine",
+    "get_strategy",
     "ServeResult",
     "ServeStats",
     "SlotAccounting",

@@ -116,6 +116,17 @@ class AdmissionPolicy:
         """Whether to seat ``req`` now; False sheds it (recorded, never served)."""
         return True
 
+    def speculation(self, snap: LoadSnapshot) -> bool:
+        """Whether a speculative pool should speculate this round.
+
+        Only consulted on pools whose decode strategy speculates at all
+        (a greedy pool ignores it).  The base policy always says yes —
+        the strategy itself already falls back to plain decode when no
+        live row wants speculation; :class:`SLOAdaptive` instead gates
+        on the modeled gain at the tier it is currently serving.
+        """
+        return True
+
     def observe(self, rs: RequestStats) -> None:
         """Feed one retirement record (rolling-window latency signals)."""
 
@@ -202,6 +213,8 @@ class SLOAdaptive(AdmissionPolicy):
         recover_after: int = 8,
         min_dwell_ticks: int = 8,
         window: int = 64,
+        spec_draft_tier: str = "draft",
+        spec_k: int = 4,
     ):
         from repro.engine import config as engine_config
 
@@ -231,6 +244,10 @@ class SLOAdaptive(AdmissionPolicy):
         self.degrade_after, self.recover_after = degrade_after, recover_after
         self.min_dwell_ticks = min_dwell_ticks
         self.window = window
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        self.spec_draft_tier = engine_config.get_tier(spec_draft_tier).name
+        self.spec_k = spec_k
         self.begin(None)
 
     def begin(self, pool_tier: Optional[str]) -> None:
@@ -271,6 +288,20 @@ class SLOAdaptive(AdmissionPolicy):
                     and self._rung > 0):
                 self._switch(snap, self._rung - 1, "recover")
         return self.ladder[self._rung]
+
+    def speculation(self, snap: LoadSnapshot) -> bool:
+        """Speculate only while the modeled gain at the *currently served*
+        rung beats plain decode: the closed-form accept-rate bound
+        (``engine.config.accept_rate_estimate``) and the gate-delay cost
+        model decide, so a pool already degraded to the draft rung stops
+        speculating against itself (gain exactly 1.0) instead of burning
+        k wasted proposal steps per round.  Deterministic: a pure
+        function of the rung, so a replayed trace replays the decisions."""
+        from repro.engine.config import speculation_gain
+
+        return speculation_gain(
+            self.spec_draft_tier, self.ladder[self._rung], self.spec_k
+        ) > 1.0
 
     def _switch(self, snap: LoadSnapshot, rung: int, reason: str) -> None:
         self._switches.append(TierSwitch(

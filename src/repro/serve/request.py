@@ -45,6 +45,12 @@ class Request:
     # request carrying one — rejected requests count as missed, so a
     # load-shedding policy cannot game the metric.
     slo_ttft_s: Optional[float] = None
+    # decode-strategy preference (repro.serve.strategy).  None = ride the
+    # pool's strategy.  On a speculative pool, "greedy" opts the round
+    # out of speculation when no live row wants it; "speculative" asks
+    # for it.  Never changes the token stream — committed tokens are
+    # always the verify engine's argmax — only the round shape/cost.
+    strategy: Optional[str] = None
 
     def __post_init__(self):
         if len(self.tokens) < 1:
@@ -54,6 +60,11 @@ class Request:
         if self.slo_ttft_s is not None and self.slo_ttft_s <= 0:
             raise ValueError(
                 f"request {self.id}: slo_ttft_s must be > 0, got {self.slo_ttft_s}"
+            )
+        if self.strategy not in (None, "greedy", "speculative"):
+            raise ValueError(
+                f"request {self.id}: unknown strategy {self.strategy!r} "
+                f"(expected None, 'greedy' or 'speculative')"
             )
 
     @property
@@ -83,6 +94,21 @@ class RequestStats:
     queue_delay_s: Optional[float] = None  # open loop: admission - arrival
     tier_served: str = ""  # accuracy tier actually served ("" = pool config)
     slo_ttft_s: Optional[float] = None  # the request's TTFT SLO, if any
+    proposed: int = 0  # speculative rounds: draft tokens proposed for this row
+    accepted: int = 0  # of those, accepted by the verify forward
+
+    @property
+    def rolled_back(self) -> int:
+        """Draft tokens whose KV writes were abandoned (never committed)."""
+        return self.proposed - self.accepted
+
+    @property
+    def accept_rate(self) -> Optional[float]:
+        """Per-request draft acceptance, ``None`` when nothing was proposed
+        (the no-data-is-not-zero convention of ``stats.percentile``)."""
+        if self.proposed == 0:
+            return None
+        return self.accepted / self.proposed
 
 
 def synth_requests(

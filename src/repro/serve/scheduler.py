@@ -58,6 +58,7 @@ import numpy as np
 from repro.serve.policy import AdmissionPolicy, LoadSnapshot, StaticTier, get_policy
 from repro.serve.request import Request, RequestStats
 from repro.serve.stats import ServeResult, ServeStats, SlotAccounting
+from repro.serve.strategy import RowView, TierEngine, build_tier_engine, get_strategy
 from repro.train.steps import make_decode_step, make_prefill_step
 
 __all__ = [
@@ -66,6 +67,29 @@ __all__ = [
     "static_serve_loop",
     "supports_continuous",
 ]
+
+# Decode internals that used to live here as private closures/classes and
+# now belong to repro.serve.strategy.  Importing them from this module was
+# never supported API; raise with a pointer instead of silently breaking
+# (docs/engine.md §Migration map has the closure -> strategy mapping).
+_MOVED_TO_STRATEGY = {
+    "_TierEngine": "TierEngine",
+    "_build_engine": "build_tier_engine",
+    "decode_greedy": "GreedyDecode.decode_round",
+    "seat": "ContinuousScheduler.run (scheduler-internal)",
+    "retire": "ContinuousScheduler.run (scheduler-internal)",
+    "pump": "ContinuousScheduler.run (scheduler-internal)",
+}
+
+
+def __getattr__(name):
+    if name in _MOVED_TO_STRATEGY:
+        raise AttributeError(
+            f"repro.serve.scheduler.{name} moved to the decode-strategy "
+            f"layer: use repro.serve.strategy.{_MOVED_TO_STRATEGY[name]} "
+            f"(see docs/engine.md, 'Scheduler closures -> DecodeStrategy')"
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 RECURRENT_KINDS = ("rglru", "ssd")  # layer kinds with pad-absorbing state
 
@@ -161,6 +185,8 @@ class _Slot:
     arrival_s: float = 0.0  # open loop: arrival time on the run clock
     queue_delay_s: Optional[float] = None  # open loop: admission - arrival
     tier_served: str = ""  # accuracy tier at admission ("" = pool config)
+    proposed: int = 0  # speculative: draft tokens proposed for this row
+    accepted: int = 0  # speculative: draft tokens the verify step accepted
 
     @property
     def emitted(self) -> int:
@@ -176,27 +202,6 @@ class _Slot:
             self.done, self.finish_reason = True, "budget"
         if self.done:
             self.t_done = time.perf_counter() if now is None else now
-
-
-@dataclasses.dataclass(frozen=True)
-class _TierEngine:
-    """One accuracy tier's jitted serving steps over the shared slot pool.
-
-    Approximation only changes the forward math — KV cache shapes and
-    dtypes are tier-independent — so every engine reads and writes the
-    *same* physical pool cache, and switching the serving tier mid-run
-    is a dict lookup plus (first visit) a jit compile.  This is the
-    serving-layer analogue of reconfiguring an accuracy-configurable
-    multiplier's splitting point in place: same hardware (weights +
-    cache), different carry-chain cut, near-zero switching cost.
-    """
-
-    key: Optional[str]  # engine-cache key (canonical tier, None = pool base)
-    name: Optional[str]  # canonical tier name (None = no tier applied)
-    admit_step: object  # jitted single-row prefill + scatter + argmax
-    prefill_pool: object  # jitted batched pool prefill
-    decode: object  # jitted pool decode with fused greedy argmax
-    cost_factor: float  # tier_cycle_factor: virtual clock cost per step
 
 
 class ContinuousScheduler:
@@ -219,10 +224,18 @@ class ContinuousScheduler:
         against it.  Requests carrying a ``quality`` are checked against
         the pool's tier at admission: a mismatch raises rather than
         silently serving the request at a different accuracy.
+      strategy: the pool's decode discipline — a
+        :mod:`repro.serve.strategy` name (``"greedy"`` / ``"speculative"``)
+        or a :class:`~repro.serve.strategy.DecodeStrategy` instance.
+        ``GreedyDecode`` (the default) reproduces the pre-strategy
+        scheduler bit for bit; ``SelfSpeculative`` reserves
+        ``strategy.extra_capacity`` spare physical KV slots per row for
+        its verify window, admits at its verify tier, and commits
+        1..k+1 verify-quality tokens per round.
     """
 
     def __init__(self, model, params, *, batch_size: int, prompt_len: int,
-                 max_new: int, mesh=None, quality=None):
+                 max_new: int, mesh=None, quality=None, strategy=None):
         if model.cfg.is_encdec:
             raise ValueError(
                 "ContinuousScheduler supports decoder-only families; "
@@ -237,7 +250,11 @@ class ContinuousScheduler:
         self._recurrent = has_recurrent_state(model.cfg)
         self.model, self.params = model, params
         self.batch_size, self.prompt_len, self.max_new = batch_size, prompt_len, max_new
-        self.capacity = prompt_len + max_new
+        self.strategy = get_strategy(strategy)
+        # physical per-row cache: the logical window plus whatever spare
+        # tail the strategy needs (speculative verify writes up to k past
+        # the last committed slot before rollback)
+        self.capacity = prompt_len + max_new + self.strategy.extra_capacity
         self.mesh = mesh
         self._cache_dtype = jnp.dtype(model.cfg.dtype)
         self._engines: dict = {}
@@ -250,48 +267,21 @@ class ContinuousScheduler:
         self._decode = self._base_engine.decode
 
     # ------------------------------------------------------------- engines
-    def _build_engine(self, model, name, key) -> _TierEngine:
-        """Jit the (admit, pool-prefill, decode) triple for one tier."""
-        prefill = make_prefill_step(model, self.capacity)
-        decode = make_decode_step(model)
-
-        # Admission, fused to one dispatch: single-row prefill + scatter
-        # into the freed slot + greedy first token.
-        def admit_step(params, caches, toks, pos, row):
-            row_caches, logits = prefill(params, {"tokens": toks, "positions": pos})
-            caches = _scatter_row(caches, row_caches, row)
-            tok0 = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
-            return caches, tok0
-
-        # Initial fill, when the queue covers every slot: one batched
-        # prefill *is* the pool cache — no scatter at all.
-        def prefill_pool(params, toks, pos):
-            caches, logits = prefill(params, {"tokens": toks, "positions": pos})
-            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-
-        # Decode with the greedy argmax fused in (one dispatch per step,
-        # and only (B,) token ids cross back to the host).
-        def decode_greedy(params, caches, tok, pos, write):
-            logits, caches = decode(params, caches, tok, pos, write)
-            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), caches
-
-        from repro.engine.config import tier_cycle_factor
-
-        return _TierEngine(
-            key=key,
-            name=name,
-            admit_step=jax.jit(admit_step, donate_argnums=1),
-            prefill_pool=jax.jit(prefill_pool),
-            decode=jax.jit(decode_greedy, donate_argnums=1),
-            cost_factor=tier_cycle_factor(name),
+    def _build_engine(self, model, name, key) -> TierEngine:
+        """Jit the (admit, pool-prefill, decode, verify) bundle for one
+        tier — the heavy lifting lives in
+        :func:`repro.serve.strategy.build_tier_engine`."""
+        return build_tier_engine(
+            model, self.capacity, name=name, key=key, scatter_row=_scatter_row,
         )
 
-    def _engine_for(self, tier) -> _TierEngine:
+    def engine_for(self, tier) -> TierEngine:
         """The engine serving ``tier`` (None = the pool's base config),
         built and jitted on first visit, cached for the scheduler's
         lifetime.  Safe to apply to the already-tier-resolved pool model:
         ``engine.config.apply_quality`` replaces the approx config
-        wholesale, so re-tiering is not cumulative."""
+        wholesale, so re-tiering is not cumulative.  Decode strategies
+        call this to reach their draft/verify tiers."""
         key = tier if tier is not None else self.quality
         eng = self._engines.get(key)
         if eng is None:
@@ -299,6 +289,9 @@ class ContinuousScheduler:
             eng = self._build_engine(model, name, key)
             self._engines[key] = eng
         return eng
+
+    # pre-strategy private name, kept for callers that grew around it
+    _engine_for = engine_for
 
     # ------------------------------------------------------------- helpers
     def _mesh_ctx(self):
@@ -362,6 +355,7 @@ class ContinuousScheduler:
                 self.params, caches, jnp.zeros((B, 1), jnp.int32), zeros, zeros,
             )
             jax.block_until_ready(nxt)
+            self.strategy.warmup(self)
 
     # ----------------------------------------------------------------- run
     def run(
@@ -455,7 +449,13 @@ class ContinuousScheduler:
         seat_counts = [0] * B
         last_write = [0] * B  # per-slot last physical KV write index
         position_violations = 0
+        spec_rounds = spec_proposed = spec_accepted = 0
+        modeled_cost = 0.0  # sum of round costs in exact-decode-step units
         engine = self._base_engine
+        # admissions (prefill) run at the strategy's admission tier — for
+        # greedy that is the serving engine itself; a speculative strategy
+        # pins it to its verify tier so the cache prefix is verify-quality
+        admit_eng = self.engine_for(self.strategy.admission_key(engine.key))
         pol.begin(self.quality)
         now = 0.0  # open-loop clock (virtual seconds, or wall since t0)
 
@@ -499,6 +499,8 @@ class ContinuousScheduler:
                     queue_delay_s=s.queue_delay_s,
                     tier_served=s.tier_served,
                     slo_ttft_s=s.req.slo_ttft_s,
+                    proposed=s.proposed,
+                    accepted=s.accepted,
                 )
             else:
                 rs = RequestStats(
@@ -511,6 +513,8 @@ class ContinuousScheduler:
                     finish_reason=s.finish_reason,
                     tier_served=s.tier_served,
                     slo_ttft_s=s.req.slo_ttft_s,
+                    proposed=s.proposed,
+                    accepted=s.accepted,
                 )
             retired.append(rs)
             outputs[s.req.id] = np.asarray(s.tokens, np.int32)
@@ -550,7 +554,7 @@ class ContinuousScheduler:
             last_write[i] = P - 1
             slot = _Slot(req=req, tokens=[], admit_step=step, t_first=t_first,
                          arrival_s=arrival, queue_delay_s=queue_delay,
-                         tier_served=engine.name or "")
+                         tier_served=admit_eng.name or "")
             slot.absorb(tok0, now=t_first if open_loop else None)
             cur_tok[i, 0] = tok0
             slots[i] = slot
@@ -579,7 +583,7 @@ class ContinuousScheduler:
                 padded = [self._pad(r) for r in first]
                 toks = jnp.asarray(np.stack([t for t, _ in padded]))
                 pos = jnp.asarray(np.stack([p for _, p in padded]))
-                caches, tok0s = self._prefill_pool(self.params, toks, pos)
+                caches, tok0s = admit_eng.prefill_pool(self.params, toks, pos)
                 tok0s = np.asarray(tok0s)
                 t_b = time.perf_counter()
                 prefill_s += t_b - t0
@@ -597,7 +601,9 @@ class ContinuousScheduler:
                 want = pol.tier(snapshot())
                 want = want if want is not None else self.quality
                 if want != engine.key:
-                    engine = self._engine_for(want)
+                    engine = self.engine_for(want)
+                    admit_eng = self.engine_for(
+                        self.strategy.admission_key(engine.key))
                 # retire finished rows, refill freed slots from the queue
                 for i in range(B):
                     if slots[i] is not None and slots[i].done:
@@ -612,14 +618,14 @@ class ContinuousScheduler:
                         if pol.enforces_tier_tags:
                             _check_request_quality(req, self.quality)
                         t_a = time.perf_counter()
-                        caches, tok0 = self._prefill_row(req, caches, i, engine)
+                        caches, tok0 = self._prefill_row(req, caches, i, admit_eng)
                         t_b = time.perf_counter()
                         prefill_s += t_b - t_a
                         if open_loop:
                             arr = arrived_at.pop(req.id)
                             qd = now - arr
                             now = (
-                                now + step_time_s * engine.cost_factor
+                                now + step_time_s * admit_eng.cost_factor
                                 if clock == "virtual"
                                 else time.perf_counter() - t0
                             )
@@ -646,45 +652,60 @@ class ContinuousScheduler:
                     break
                 max_live = max(max_live, len(live))
 
-                # one pool decode step: per-row true position + write slot
-                pos = np.zeros((B,), np.int32)
-                write = np.zeros((B,), np.int32)
-                for i in range(B):
-                    if slots[i] is not None:
-                        s = slots[i]
-                        pos[i] = s.req.prompt_len + s.emitted - 1
-                        write[i] = P + s.emitted - 1
-                        # invariants: the physical write index advances by
-                        # exactly one slot per step, stays inside the cache,
-                        # and the true position is the write index shifted by
-                        # the row's (constant) pad offset
-                        if (
-                            write[i] != last_write[i] + 1
-                            or write[i] >= self.capacity
-                            or pos[i] != write[i] - (P - s.req.prompt_len)
-                        ):
-                            position_violations += 1
-                        last_write[i] = int(write[i])
-                    else:  # dead lane: park at the last slot, offset 0
-                        pos[i] = write[i] = self.capacity - 1
+                # one decode round, delegated to the pool's strategy: greedy
+                # is exactly the historical single decode; speculative is k
+                # draft steps + one batched verify forward
+                rows = [
+                    RowView(index=i, prompt_len=slots[i].req.prompt_len,
+                            emitted=slots[i].emitted,
+                            strategy=slots[i].req.strategy)
+                    for i in live
+                ]
                 t_d = time.perf_counter()
-                nxt, caches = engine.decode(
-                    self.params, caches, jnp.asarray(cur_tok),
-                    jnp.asarray(pos), jnp.asarray(write),
+                rr = self.strategy.decode_round(
+                    self, engine, caches, cur_tok, rows,
+                    speculate=pol.speculation(snapshot()),
                 )
-                nxt = np.asarray(nxt)
+                caches = rr.caches
                 decode_s += time.perf_counter() - t_d
-                step += 1
-                busy_row_steps += len(live)
+                step += rr.steps
+                busy_row_steps += len(live) * rr.steps
+                modeled_cost += rr.cost
+                spec_proposed += rr.proposed
+                spec_accepted += rr.accepted
+                if rr.proposed:
+                    spec_rounds += 1
                 if open_loop:
                     now = (
-                        now + step_time_s * engine.cost_factor
+                        now + step_time_s * rr.cost
                         if clock == "virtual"
                         else time.perf_counter() - t0
                     )
                 for i in live:
-                    slots[i].absorb(int(nxt[i]), now=now if open_loop else None)
-                    cur_tok[i, 0] = nxt[i]
+                    s = slots[i]
+                    pr = rr.per_row.get(i)
+                    if pr is not None:
+                        s.proposed += pr[0]
+                        s.accepted += pr[1]
+                    for tok in rr.tokens.get(i, ()):
+                        if s.done:  # budget/EOS cut the committed run short
+                            break
+                        # per committed token the same invariants the
+                        # pre-strategy loop checked per step: the physical
+                        # write index advances by exactly one slot, stays
+                        # inside the logical window, and the true position
+                        # is the write index shifted by the row's pad offset
+                        wr = P + s.emitted - 1
+                        pp = s.req.prompt_len + s.emitted - 1
+                        if (
+                            wr != last_write[i] + 1
+                            or wr >= P + self.max_new
+                            or pp != wr - (P - s.req.prompt_len)
+                        ):
+                            position_violations += 1
+                        last_write[i] = wr
+                        s.absorb(int(tok), now=now if open_loop else None)
+                    cur_tok[i, 0] = s.tokens[-1]
                 if open_loop:
                     pump()
 
@@ -725,6 +746,11 @@ class ContinuousScheduler:
             starved=len(requests) - len(retired) - len(rejected),
             slo_total=slo_total,
             slo_attained=slo_attained,
+            strategy=self.strategy.name,
+            spec_rounds=spec_rounds,
+            spec_proposed=spec_proposed,
+            spec_accepted=spec_accepted,
+            modeled_cost=modeled_cost,
         )
         accounting = SlotAccounting(
             seated=seated_total,
@@ -743,17 +769,19 @@ class ContinuousScheduler:
 def continuous_serve_loop(
     model, params, requests: Sequence[Request], *,
     batch_size: int, prompt_len: int, max_new: int,
-    mesh=None, warmup: bool = True, quality=None, **run_kwargs,
+    mesh=None, warmup: bool = True, quality=None, strategy=None, **run_kwargs,
 ) -> ServeResult:
     """One-shot convenience wrapper over :class:`ContinuousScheduler`.
 
-    ``run_kwargs`` pass through to :meth:`ContinuousScheduler.run`
-    (``arrivals_s`` / ``policy`` / ``step_time_s`` / ``clock`` for
-    open-loop clocked admission)."""
+    ``strategy`` selects the pool's decode discipline (a
+    :mod:`repro.serve.strategy` name or instance); ``run_kwargs`` pass
+    through to :meth:`ContinuousScheduler.run` (``arrivals_s`` /
+    ``policy`` / ``step_time_s`` / ``clock`` for open-loop clocked
+    admission)."""
     sched = ContinuousScheduler(
         model, params,
         batch_size=batch_size, prompt_len=prompt_len, max_new=max_new, mesh=mesh,
-        quality=quality,
+        quality=quality, strategy=strategy,
     )
     return sched.run(requests, warmup=warmup, **run_kwargs)
 

@@ -138,6 +138,7 @@ class SoakReport:
     violations: tuple  # of str, aggregated over windows + run-level checks
     loop: str = "closed"  # "closed" (queue drain) | "open" (arrival clocks)
     policy: str = ""  # admission policy name ("" = implicit static)
+    strategy: str = ""  # pool decode strategy ("" = default greedy)
 
     @property
     def ok(self) -> bool:
@@ -208,6 +209,7 @@ class SoakReport:
             "quality": self.quality,
             "loop": self.loop,
             "policy": self.policy or "static",
+            "strategy": self.strategy or "greedy",
             "seed": self.seed,
             "requests": self.requests,
             "batch_size": self.batch_size,
@@ -353,6 +355,7 @@ def run_soak(
     policy=None,
     step_time_s: float = 0.01,
     clock: str = "virtual",
+    strategy=None,
 ) -> SoakReport:
     """Stream ``spec``'s workload through the scheduler, window by window.
 
@@ -389,6 +392,14 @@ def run_soak(
       step_time_s, clock: the open-loop clock (see
         :meth:`ContinuousScheduler.run`); the default virtual clock
         makes every soak timing deterministic.
+      strategy: decode strategy name or instance for the continuous
+        scheduler (see :mod:`repro.serve.strategy`).  ``None`` keeps the
+        default greedy rounds; ``"speculative"`` self-speculates, and
+        since speculative output bit-matches plain decode the parity
+        spot-checks against the static oracle remain valid verbatim.
+        Workload traces with a ``spec_fraction`` (churn/bursty presets)
+        tag a fraction of requests, so a speculative soak exercises
+        mid-stream strategy switching as tagged rows come and go.
     """
     if scheduler not in ("continuous", "static"):
         raise ValueError(f"scheduler must be continuous|static, got {scheduler!r}")
@@ -398,6 +409,8 @@ def run_soak(
         raise ValueError("open-loop soak requires the continuous scheduler")
     if spot_check < 0:
         raise ValueError(f"spot_check must be >= 0, got {spot_check}")
+    if scheduler == "static" and strategy not in (None, "greedy"):
+        raise ValueError("decode strategies require the continuous scheduler")
     pol: Optional[AdmissionPolicy] = (
         get_policy(policy) if policy is not None else None
     )
@@ -426,7 +439,7 @@ def run_soak(
     if scheduler == "continuous":
         sched = ContinuousScheduler(
             model, params, batch_size=batch_size, prompt_len=spec.prompt_len,
-            max_new=spec.max_new, quality=quality,
+            max_new=spec.max_new, quality=quality, strategy=strategy,
         )
         sched.warmup()
         pool_tier = sched.quality
@@ -519,4 +532,5 @@ def run_soak(
         violations=tuple(violations),
         loop=loop,
         policy=pol.name if pol is not None else "",
+        strategy=sched.strategy.name if sched is not None else "",
     )

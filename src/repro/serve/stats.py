@@ -111,6 +111,28 @@ class ServeStats:
     starved: int = 0  # offered but neither served nor shed (must be 0)
     slo_total: int = 0  # offered requests carrying a TTFT SLO
     slo_attained: int = 0  # of those, served with ttft <= slo
+    # ---- decode strategy (repro.serve.strategy; default-off for old readers)
+    strategy: str = ""  # pool decode strategy ("" = pre-strategy record)
+    spec_rounds: int = 0  # decode rounds that actually speculated
+    spec_proposed: int = 0  # draft tokens proposed across those rounds
+    spec_accepted: int = 0  # of those, accepted by the verify forward
+    modeled_cost: float = 0.0  # sum of round costs in exact-step units
+
+    @property
+    def spec_rolled_back(self) -> int:
+        """Draft tokens proposed but rejected: their KV writes were
+        abandoned on the host side (the rollback counter)."""
+        return self.spec_proposed - self.spec_accepted
+
+    @property
+    def accept_rate(self) -> Optional[float]:
+        """Draft-token acceptance over the run, ``None`` when nothing was
+        proposed — same no-data-is-not-zero convention as
+        :func:`percentile` (a greedy run renders ``accept n/a``, not a
+        fake 0%)."""
+        if self.spec_proposed == 0:
+            return None
+        return self.spec_accepted / self.spec_proposed
 
     @property
     def tokens_per_s(self) -> float:
@@ -150,13 +172,29 @@ class ServeStats:
                 extra += f", {self.rejected} rejected"
             if self.tier_switches:
                 extra += f", {self.tier_switches} tier switches"
+        if self.strategy and self.strategy != "greedy":
+            # closed- and open-loop reports render the same acceptance
+            # cell, with the empty-distribution n/a guard: a speculative
+            # pool whose rounds never speculated says so instead of 0%
+            ar = self.accept_rate
+            if ar is None:
+                extra += ", accept n/a"
+            else:
+                extra += (
+                    f", accept {ar:.0%} "
+                    f"({self.spec_rolled_back} rolled back)"
+                )
         pol = f" [{self.policy}]" if self.policy and self.open_loop else ""
         tier = f" [tier {self.quality}]" if self.quality else ""
+        strat = (
+            f" [{self.strategy}]"
+            if self.strategy and self.strategy != "greedy" else ""
+        )
         return (
             f"[{self.scheduler}] served {self.requests} requests, "
             f"{self.tokens_out} tokens in {self.wall_s:.2f}s "
             f"({self.tokens_per_s:.1f} tok/s on {self.devices} device(s))"
-            + extra + pol + tier
+            + extra + strat + pol + tier
         )
 
 

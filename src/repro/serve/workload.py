@@ -24,6 +24,11 @@ The knobs, each a small named model rather than a magic constant:
 * **Tier mix** — weighted assignment of ``Request.quality`` tags, so a
   soak can drive mixed sold-at-tier traffic through a pool (untagged
   requests ride any pool; tagged ones must match it).
+* **Speculative fraction** — fraction of requests tagged
+  ``Request.strategy == "speculative"``, drawn from a separate seeded
+  stream so it never perturbs the other draws.  On a speculative pool
+  this exercises mid-stream strategy switching (the churn and bursty
+  presets tag a quarter of their traffic).
 * **Abuse presets** — ``flood`` (every request pins the prompt bucket
   and the full generation budget: worst-case KV residency) and ``churn``
   (near-minimal budgets at high rate: most admissions retire
@@ -97,6 +102,14 @@ class WorkloadSpec:
     # turns the churn preset's budget-capped retirement into true
     # instant-EOS retirement without hardcoding a weight-dependent token.
     eos_probe: bool = False
+    # fraction of requests tagged ``strategy="speculative"`` (the rest
+    # stay untagged).  On a speculative pool this drives mid-stream
+    # strategy switching: rounds speculate only while some live row
+    # carries the tag.  Drawn from a *separate* seeded stream, so
+    # enabling it never perturbs the main-stream draws (arrivals,
+    # lengths, budgets, tokens, tiers) — committed traces stay
+    # byte-identical.
+    spec_fraction: float = 0.0
 
     def __post_init__(self):
         if self.requests < 1:
@@ -127,6 +140,10 @@ class WorkloadSpec:
                 raise ValueError(f"tier_mix weight for {tier!r} must be > 0, got {weight}")
         if self.slo_ttft_s is not None and self.slo_ttft_s <= 0:
             raise ValueError(f"slo_ttft_s must be > 0, got {self.slo_ttft_s}")
+        if not 0.0 <= self.spec_fraction <= 1.0:
+            raise ValueError(
+                f"spec_fraction must be in [0, 1], got {self.spec_fraction}"
+            )
 
 
 # Named traffic shapes: overrides applied on top of the caller's sizes.
@@ -134,7 +151,8 @@ PRESETS: dict[str, dict] = {
     # open-loop steady state: memoryless arrivals, uniform lengths
     "steady": {"arrival": "poisson", "prompt_dist": "uniform", "gen_dist": "uniform"},
     # flash crowds over long-tail lengths — the realistic stress mix
-    "bursty": {"arrival": "bursty", "prompt_dist": "zipf", "gen_dist": "lognormal"},
+    "bursty": {"arrival": "bursty", "prompt_dist": "zipf", "gen_dist": "lognormal",
+               "spec_fraction": 0.25},
     # abusive client: every request pins the bucket and the full budget
     "flood": {"arrival": "immediate", "prompt_dist": "fixed", "gen_dist": "fixed"},
     # abusive client: near-minimal budgets at high rate — most admissions
@@ -145,7 +163,8 @@ PRESETS: dict[str, dict] = {
     # rather than budget exhaustion — real abusive-client behavior, not
     # just its deterministic stand-in.
     "churn": {"arrival": "poisson", "rate_rps": 256.0, "prompt_dist": "zipf",
-              "gen_dist": "zipf", "min_gen": 1, "eos_probe": True},
+              "gen_dist": "zipf", "min_gen": 1, "eos_probe": True,
+              "spec_fraction": 0.25},
 }
 
 
@@ -241,9 +260,17 @@ def iter_requests(
     One ``default_rng(seed)`` with a fixed per-request draw order
     (arrival, prompt length, budget, tokens, tier), so the trace is a
     pure function of ``(spec, seed)`` — the deterministic-replay
-    guarantee the soak harness and the BENCH metadata lean on.
+    guarantee the soak harness and the BENCH metadata lean on.  The
+    ``spec_fraction`` strategy tag draws come from a *separate* child
+    stream (and only when the fraction is nonzero), so turning
+    speculation on or off in a preset never shifts the main-stream
+    draws above.
     """
     rng = np.random.default_rng(seed)
+    spec_rng = (
+        np.random.default_rng(np.random.SeedSequence([seed, 0x5BEC]))
+        if spec.spec_fraction > 0 else None
+    )
     arrivals = _Arrivals(spec, rng)
     if spec.tier_mix:
         tiers = [t for t, _ in spec.tier_mix]
@@ -255,8 +282,14 @@ def iter_requests(
         budget = _sample_length(rng, spec.gen_dist, spec.min_gen, spec.max_new, spec)
         tokens = rng.integers(0, spec.vocab_size, size=length).astype(np.int32)
         quality = tiers[int(rng.choice(len(tiers), p=probs))] if spec.tier_mix else None
+        strategy = (
+            "speculative"
+            if spec_rng is not None and spec_rng.random() < spec.spec_fraction
+            else None
+        )
         yield Request(id=i, tokens=tokens, max_new=budget, eos_id=spec.eos_id,
-                      quality=quality, slo_ttft_s=spec.slo_ttft_s), t
+                      quality=quality, slo_ttft_s=spec.slo_ttft_s,
+                      strategy=strategy), t
 
 
 def iter_windows(
@@ -294,6 +327,7 @@ def trace_digest(spec: WorkloadSpec, seed: int = 0) -> str:
         h.update(np.int64(req.max_new).tobytes())
         h.update(np.int64(-1 if req.eos_id is None else req.eos_id).tobytes())
         h.update((req.quality or "").encode() + b"\0")
+        h.update((req.strategy or "").encode() + b"\0")
         h.update(np.float64(t).tobytes())
     return h.hexdigest()
 

@@ -22,6 +22,7 @@ EXPECTED_SUITES = {
     "roofline",
     "serve_soak",
     "serve_throughput",
+    "speculative",
 }
 
 

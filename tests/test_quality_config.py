@@ -161,3 +161,102 @@ def test_engine_matmul_defaults_resolve_via_controller():
         np.asarray(engine.multiply(a, b)),
         np.asarray(engine.multiply(a, b, n=8, t=4)),
     )
+
+
+# ------------------------------------------------- speculative estimates
+def _pinned_tier(t: int, n: int = 8) -> engine_config.QualityTier:
+    """An on-the-fly tier whose mlp budget resolves to exactly ``t``.
+
+    The NMED estimate is strictly increasing in t and cycle delay falls
+    toward the delay-optimal split, so a budget of ``nmed_est(t)``
+    admits [1, t] and the controller picks t itself (for t at or below
+    the delay-optimal split — pinned by the assertion in the test).
+    """
+    pts = engine_config.sweep_t(n)
+    return engine_config.QualityTier(
+        name=f"pin{n}-{t}", mode="bitexact",
+        budgets=(("mlp", ErrorBudget(max_nmed=pts[t - 1].nmed_est)),),
+    )
+
+
+def test_accept_rate_estimate_degenerate_pairs():
+    """Same resolved quality on both sides: the verifier recomputes the
+    draft exactly, so the estimate is exactly 1.0 — including the
+    exact/exact pair (no budgets at all)."""
+    for tier in engine_config.list_tiers():
+        assert engine_config.accept_rate_estimate(tier, tier) == 1.0
+    # distinct resolutions must not claim certainty
+    for draft in ("high", "balanced", "draft"):
+        est = engine_config.accept_rate_estimate(draft, "exact")
+        assert 0.0 <= est < 1.0
+
+
+def test_accept_rate_estimate_monotone_in_t():
+    """A sloppier draft split (larger t, before the ER tail) can only
+    lower the agreement estimate against an exact verifier."""
+    ts = [1, 2, 3, 4]
+    ers = [engine_config.sweep_t(8)[t - 1].er_bound for t in ts]
+    assert ers == sorted(ers), "premise: ER bound rises toward the peak"
+    ests = []
+    for t in ts:
+        tier = _pinned_tier(t)
+        assert engine_config.resolve_tier(tier).per_target[0].t == t
+        est = engine_config.accept_rate_estimate(tier, "exact")
+        assert est == pytest.approx(max(0.0, 1.0 - ers[t - 1]))
+        ests.append(est)
+    assert all(a >= b for a, b in zip(ests, ests[1:]))
+
+
+@pytest.mark.parametrize("td,tv", [(2, 1), (1, 2), (2, 2)])
+def test_accept_rate_estimate_bounds_simulated_agreement(td, tv):
+    """Exhaustive 4-bit check: the estimate is a true *lower* bound on
+    the measured draft/verify agreement rate, and it is not slack by
+    more than the union-bound gap (the two ER terms)."""
+    from repro.engine import dispatch
+
+    import jax.numpy as jnp
+
+    n = 4
+    pts = engine_config.sweep_t(n)
+    draft, verify = _pinned_tier(td, n), _pinned_tier(tv, n)
+    assert engine_config.resolve_tier(draft, n=n).per_target[0].t == td
+    assert engine_config.resolve_tier(verify, n=n).per_target[0].t == tv
+    est = engine_config.accept_rate_estimate(draft, verify, n=n)
+    a, b = np.meshgrid(np.arange(2**n), np.arange(2**n))
+    a = jnp.asarray(a.ravel(), jnp.uint32)
+    b = jnp.asarray(b.ravel(), jnp.uint32)
+    prod_d = np.asarray(dispatch.multiply(a, b, n=n, t=td, approx=True))
+    prod_v = np.asarray(dispatch.multiply(a, b, n=n, t=tv, approx=True))
+    measured = float(np.mean(prod_d == prod_v))
+    assert measured >= est, (measured, est)
+    gap = pts[td - 1].er_bound + pts[tv - 1].er_bound
+    assert measured - est <= gap + 1e-12
+    if td == tv:
+        assert est == 1.0 and measured == 1.0
+
+
+def test_expected_round_tokens_and_gain():
+    """Round-economics sanity: the truncated-geometric mean and the
+    break-even gate behave at the edges."""
+    ert = engine_config.expected_round_tokens
+    assert ert(0.0, 4) == 1.0  # nothing accepted: the verify token only
+    assert ert(1.0, 4) == 5.0  # everything accepted: k + 1
+    rates = [ert(a, 4) for a in (0.1, 0.3, 0.5, 0.9)]
+    assert rates == sorted(rates) and all(1.0 < r < 5.0 for r in rates)
+    with pytest.raises(ValueError):
+        ert(-0.1, 4)
+    with pytest.raises(ValueError):
+        ert(0.5, 0)
+    # a degenerate pair accepts everything at equal step cost: gain 1.0
+    assert engine_config.speculation_gain("exact", "exact", 3) == pytest.approx(1.0)
+    # the honest finding this layer surfaced: under the gate-delay cost
+    # model a draft step still costs 0.55x an exact step, so no
+    # registered pair clears break-even — SLOAdaptive declines to
+    # speculate on real ladders (docs/serving.md records this)
+    for draft in ("high", "balanced", "draft"):
+        k, gain = engine_config.best_spec_k(draft, "exact")
+        assert 1 <= k <= 8
+        assert gain <= 1.0
+        assert gain == pytest.approx(
+            engine_config.speculation_gain(draft, "exact", k)
+        )
